@@ -1,0 +1,56 @@
+"""Per-arch train/decode step timing on reduced configs (CPU wall clock;
+relative numbers). One row per assigned architecture."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.optim import adamw, constant
+from repro.train import make_train_step
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": jnp.ones((B, S), jnp.int32),
+         "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.ones((B, S, cfg.d_model), jnp.float32)
+    if cfg.vision_patches:
+        b["vision_embeds"] = jnp.ones((B, cfg.vision_patches, cfg.d_model),
+                                      jnp.float32)
+    return b
+
+
+def bench_arch(arch: str, reps: int = 5) -> dict:
+    cfg = get_config(arch, reduced=True)
+    m = build_model(cfg)
+    opt = adamw(constant(1e-3))
+    params = m.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(m, opt))
+    b = _batch(cfg)
+    p, o, met = step(params, opt.init(params), b)      # compile
+    jax.block_until_ready(met["loss"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        p, o, met = step(p, o, b)
+    jax.block_until_ready(met["loss"])
+    dt = (time.perf_counter() - t0) / reps
+    B, S = b["tokens"].shape
+    return {"arch": arch, "us_per_call": dt * 1e6,
+            "tokens_per_s": B * S / dt}
+
+
+def main():
+    rows = []
+    for arch in ARCH_IDS:
+        r = bench_arch(arch)
+        rows.append(r)
+        print(f"{r['arch']},{r['us_per_call']:.0f},{r['tokens_per_s']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

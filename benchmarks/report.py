@@ -1,0 +1,101 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON rows
+produced by repro.launch.dryrun.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def _f(x, fmt="{:.3g}"):
+    return fmt.format(x) if isinstance(x, (int, float)) and x is not None \
+        else "-"
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "useful | MFU bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or r.get("tag"):
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_f(r['t_compute_s'])} | "
+            f"{_f(r['t_memory_s'])} | {_f(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {_f(r.get('useful_ratio'))} | "
+            f"{_f(r.get('mfu_bound'))} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile (s) | GFLOP/chip | GB/chip (HBM) "
+           "| GB/chip (links) | mem_analysis (GiB) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("tag"):
+            continue
+        mem = r.get("peak_memory_per_chip")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{_f(r['t_compile_s'], '{:.0f}')} | "
+            f"{_f(r['flops_per_chip']/1e9, '{:.1f}')} | "
+            f"{_f(r['bytes_per_chip']/1e9, '{:.1f}')} | "
+            f"{_f(r['coll_bytes_per_chip']/1e9, '{:.1f}')} | "
+            f"{_f(mem/2**30 if mem else None, '{:.1f}')} |")
+    return "\n".join(out)
+
+
+def opt_table(rows):
+    """Baseline vs final-optimized (tag=_opt) MFU bound, single-pod."""
+    base = {(r["arch"], r["shape"]): r for r in rows
+            if r["mesh"] == "16x16" and not r.get("tag")}
+    opt = {(r["arch"], r["shape"]): r for r in rows
+           if r["mesh"] == "16x16" and r.get("tag") == "_opt"}
+    out = ["| arch | shape | bound (base→opt) | MFU bound base | opt | x |",
+           "|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        mb, mo = b.get("mfu_bound") or 0, o.get("mfu_bound") or 0
+        ratio = mo / mb if mb else float("nan")
+        out.append(f"| {key[0]} | {key[1]} | {b['bottleneck']}→"
+                   f"{o['bottleneck']} | {_f(mb)} | {_f(mo)} | "
+                   f"{_f(ratio, '{:.2f}')} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    for r in rows:
+        # tag rows (perf variants) are excluded from the baseline tables
+        r.setdefault("tag", "")
+    print("## Dry-run (all cells)\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(rows, args.mesh))
+    print("\n## Multi-pod (2x16x16) compile pass\n")
+    print(roofline_table(rows, "2x16x16"))
+    print("\n## Baseline vs optimized (strategy=fsdp, fused MoE dispatch, "
+          "flash-VJP attention, cf=1.25)\n")
+    print(opt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

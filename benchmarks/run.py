@@ -1,0 +1,45 @@
+"""Benchmark driver — one section per paper table/figure + model zoo.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's natural
+metric: Mb/s for throughput tables, dB-to-theory for BER tables,
+tokens/s for the model zoo).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized grids (slow)")
+    ap.add_argument("--only", default=None,
+                    choices=["throughput", "ber", "models"])
+    args = ap.parse_args()
+
+    from . import ber_tables, models_bench, throughput
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "throughput"):
+        for r in throughput.main(full=args.full):
+            name = f"tput_{r['table']}_" + "_".join(
+                f"{k}{v}" for k, v in r.items()
+                if k in ("f", "v2", "f0", "variant"))
+            print(f"{name},{r['us_per_call']:.1f},{r['mbps']:.2f}Mbps")
+    if args.only in (None, "ber"):
+        for r in ber_tables.main(full=args.full):
+            name = f"ber_{r['table']}_" + "_".join(
+                f"{k}{v}" for k, v in r.items()
+                if k in ("f", "v2", "f0", "start"))
+            print(f"{name},0,{r['dist_db']:.3f}dB")
+    if args.only in (None, "models"):
+        for r in models_bench.main():
+            print(f"model_{r['arch']},{r['us_per_call']:.0f},"
+                  f"{r['tokens_per_s']:.0f}tok/s")
+
+
+if __name__ == "__main__":
+    main()

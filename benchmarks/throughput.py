@@ -1,0 +1,85 @@
+"""Paper Tables IV & V: decoder throughput, regular vs parallel traceback.
+
+The container has no GPU/TPU; wall-clock numbers are CPU (jitted XLA) and
+meaningful as RELATIVE comparisons between the paper's own variants:
+  * serial vs parallel traceback        (Table IV vs V: paper sees ~2x)
+  * unified vs split (global-memory) survivor-path storage (Table I)
+The TPU-side absolute projection comes from the §Roofline analysis instead.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FrameSpec, STD_K7, framed_decode
+from repro.core.framed import frame_llr
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()              # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def throughput_framed(spec: FrameSpec, n: int = 2_000_000) -> dict:
+    """Mb/s of the jitted framed decoder (pure-JAX path, compiled)."""
+    rng = np.random.default_rng(0)
+    llr = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    fn = jax.jit(lambda l: framed_decode(l, STD_K7, spec))
+    dt = _time(fn, llr)
+    return {"us_per_call": dt * 1e6, "mbps": n / dt / 1e6}
+
+
+def table4(n=1_000_000):
+    rows = []
+    for v2 in (10, 20, 40):
+        for f in (64, 256):
+            r = throughput_framed(FrameSpec(f=f, v1=20, v2=v2), n)
+            rows.append({"table": "IV", "f": f, "v2": v2, **r})
+    return rows
+
+
+def table5(n=1_000_000):
+    rows = []
+    for v2 in (25, 45):
+        for f0 in (8, 32):
+            spec = FrameSpec(f=256, v1=20, v2=v2, f0=f0, v2s=v2)
+            r = throughput_framed(spec, n)
+            rows.append({"table": "V", "f0": f0, "v2": v2, **r})
+    return rows
+
+
+def unified_vs_split(n=80_000):
+    """Table I comparison on the kernel path (interpret mode => relative)."""
+    rng = np.random.default_rng(0)
+    spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
+    llr = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    frames = frame_llr(llr, spec)
+    rows = []
+    for unified in (True, False):
+        fn = jax.jit(lambda fr: ops.viterbi_decode_frames(
+            fr, STD_K7, spec, unified=unified, interpret=True))
+        dt = _time(fn, frames, reps=1)
+        rows.append({"table": "I", "variant": "unified" if unified else "split",
+                     "us_per_call": dt * 1e6, "mbps": n / dt / 1e6})
+    return rows
+
+
+def main(full: bool = False):
+    n = 4_000_000 if full else 1_000_000
+    rows = table4(n) + table5(n) + unified_vs_split()
+    for r in rows:
+        print(",".join(f"{k}={v}" if not isinstance(v, float)
+                       else f"{k}={v:.2f}" for k, v in r.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

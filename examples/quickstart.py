@@ -1,0 +1,31 @@
+"""Quickstart: encode -> AWGN channel -> unified-kernel Viterbi decode.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FrameSpec, STD_K7, encode
+from repro.core.pipeline import DecoderConfig, make_decoder
+from repro.channel.sim import awgn, ber, bpsk
+
+n = 20_000
+rng = np.random.default_rng(0)
+bits = jnp.asarray(rng.integers(0, 2, n))
+
+# transmitter: standard (2,1,7) code, generators 171/133 (paper Fig. 1)
+tx = bpsk(encode(bits, STD_K7).reshape(-1))
+
+# channel: 3 dB Eb/N0
+rx = awgn(jax.random.PRNGKey(1), tx, 3.0)
+
+# receiver: the paper's unified kernel (forward + parallel traceback in one
+# Pallas kernel, survivor paths in VMEM only), interpret=True on CPU
+cfg = DecoderConfig(spec=FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45),
+                    backend="kernel")
+decode = make_decoder(cfg)
+out = decode(rx.reshape(n, 2), n)
+
+print(f"decoded {n} bits, BER = {float(ber(out, bits)):.2e} @ 3 dB "
+      f"(theory ~1e-3)")

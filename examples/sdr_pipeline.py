@@ -1,0 +1,56 @@
+"""SDR receiver pipeline: punctured rate-3/4 stream -> depuncture ->
+framed decode (parallel traceback) -> BER, plus a sharded multi-device
+variant of the same decode (frames are the parallel axis — the paper's
+tiling is also the distribution strategy).
+
+PYTHONPATH=src python examples/sdr_pipeline.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import FrameSpec, STD_K7, encode
+from repro.core.framed import frame_llr, decode_frame
+from repro.core.pipeline import DecoderConfig, make_decoder
+from repro.core.puncture import puncture, depuncture
+from repro.channel.sim import awgn, ber, bpsk
+
+n = 99_999
+rate = "3/4"
+rng = np.random.default_rng(0)
+bits = jnp.asarray(rng.integers(0, 2, n))
+
+tx = bpsk(puncture(encode(bits, STD_K7), rate))
+print(f"tx: {n} info bits -> {tx.shape[0]} channel symbols (rate {rate})")
+rx = awgn(jax.random.PRNGKey(1), tx, 6.0)
+
+spec = FrameSpec(f=252, v1=21, v2=45, f0=42, v2s=45)
+dec = make_decoder(DecoderConfig(spec=spec, rate=rate))
+out = dec(rx, n)
+print(f"punctured {rate} BER @ 6 dB: {float(ber(out, bits)):.2e}")
+
+# ---- distributed decode: shard the FRAME axis over every local device ----
+mesh = Mesh(np.array(jax.devices()), ("frames",))
+llr = depuncture(rx, rate, n)
+frames = frame_llr(llr, spec)
+fsh = NamedSharding(mesh, P("frames", None, None))
+
+
+@jax.jit
+def decode_sharded(frames):
+    return jax.vmap(lambda fr: decode_frame(fr, STD_K7, spec))(frames)
+
+
+with mesh:
+    frames = jax.device_put(frames, fsh)
+    t0 = time.perf_counter()
+    bits_out = decode_sharded(frames)
+    bits_out.block_until_ready()
+    dt = time.perf_counter() - t0
+out2 = bits_out.reshape(-1)[:n]
+print(f"sharded decode over {mesh.devices.size} device(s): "
+      f"{n/dt/1e6:.2f} Mb/s, BER {float(ber(out2, bits)):.2e}")
+assert jnp.array_equal(out, out2)

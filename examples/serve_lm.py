@@ -1,0 +1,9 @@
+"""Batched serving example (continuous batching, slot-based).
+
+PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3_32b", "--requests", "6", "--slots", "4",
+          "--gen", "12"])

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the synthetic pipeline with checkpointing + watchdog.
+
+PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(Use --tiny for a quick smoke run.)
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import main as train_main
+
+
+def build_100m():
+    # ~100M-param member of the qwen3 family
+    base = get_config("qwen3_32b", reduced=True)
+    return dataclasses.replace(
+        base, name="qwen3-100m", num_layers=8, d_model=640, num_heads=10,
+        num_kv_heads=2, d_ff=1792, vocab=32000, head_dim=64,
+        vocab_round=128)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args()
+
+    if args.tiny:
+        train_main(["--arch", "qwen3_32b", "--reduced",
+                    "--steps", str(min(args.steps, 30)),
+                    "--global-batch", "4", "--seq", "32"])
+    else:
+        # register the 100M config by monkey-free direct use of the driver
+        # internals (the driver accepts any ModelConfig via get_config; for
+        # the example we inline the equivalent loop)
+        import repro.launch.train as TR
+        import jax.numpy as jnp
+        from repro.data import DataConfig, SyntheticLM
+        from repro.models import build_model
+        from repro.optim import adamw, warmup_cosine
+        from repro.train import LoopConfig, make_train_step, train_loop
+
+        cfg = build_100m()
+        bundle = build_model(cfg)
+        nparams = sum(x.size for x in jax.tree.leaves(
+            jax.eval_shape(bundle.init, jax.random.PRNGKey(0))))
+        print(f"{cfg.name}: {nparams/1e6:.1f}M params")
+        opt = adamw(warmup_cosine(3e-4, 20, args.steps))
+        params = bundle.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": opt.init(params)}
+        step = jax.jit(make_train_step(bundle, opt), donate_argnums=(0, 1))
+        data = SyntheticLM(cfg, DataConfig(8, 256, mode="learnable"))
+        lc = LoopConfig(total_steps=args.steps, ckpt_dir="/tmp/ckpt_100m",
+                        ckpt_every=100)
+        stats = train_loop(
+            lambda p, o, b: step(p, o, {k: jnp.asarray(v)
+                                        for k, v in b.items()}),
+            state, data, lc)
+        print(f"final loss: {stats.last_loss:.4f} after {stats.steps_run} steps")

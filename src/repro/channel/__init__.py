@@ -1,0 +1,2 @@
+from .sim import (awgn, bpsk, ber, simulate, theoretical_ber,
+                  ebn0_distance_metric)  # noqa: F401

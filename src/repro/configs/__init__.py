@@ -1,0 +1,2 @@
+from .base import (ModelConfig, MoESpec, SSMSpec, ShapeSpec, SHAPES,
+                   get_config, ARCH_IDS)  # noqa: F401

@@ -1,0 +1,89 @@
+"""Reference full-sequence Viterbi decoder (paper Alg. 1 + Alg. 2).
+
+This is the exact, serial-traceback algorithm: the baseline row (a) of the
+paper's Table I. It is the BER gold standard every framed/parallel variant is
+validated against, and the oracle for the Pallas kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .metrics import branch_metrics_half, expand_half
+from .trellis import Trellis
+
+__all__ = ["viterbi_forward", "viterbi_traceback", "viterbi_decode"]
+
+NEG = jnp.float32(-1e30)   # "minus infinity" for unreachable-ish inits
+
+
+def viterbi_forward(llr: jax.Array, trellis: Trellis,
+                    sigma0: jax.Array | None = None):
+    """Alg. 1: ACS over all stages.
+
+    Args:
+      llr: (n, beta) soft inputs (zero entries are neutral / depunctured).
+      sigma0: optional (S,) initial path metrics (zeros = unknown start, as
+        in framed decoding; the full decoder biases state 0).
+
+    Returns:
+      sel:   (n, S) int8 selector bits (0 -> predecessor 2j, 1 -> 2j+1);
+             this *is* pi, stored compressed (1 bit of info per cell).
+      sigma: (S,) final path metrics (max-normalized per stage).
+      amax:  (n,) int32 argmax state per stage (for parallel-traceback
+             boundary starts, paper §IV-D second solution).
+    """
+    S = trellis.num_states
+    prev_state = jnp.asarray(trellis.prev_state)      # (S, 2)
+    prev_out = jnp.asarray(trellis.prev_out)          # (S, 2)
+    bm_half = branch_metrics_half(llr, trellis)       # (n, 2^(beta-1))
+    if sigma0 is None:
+        sigma0 = jnp.zeros((S,), jnp.float32)
+
+    def step(sigma, bmh):
+        bm = expand_half(bmh, trellis)                # (2^beta,)
+        cand0 = sigma[prev_state[:, 0]] + bm[prev_out[:, 0]]
+        cand1 = sigma[prev_state[:, 1]] + bm[prev_out[:, 1]]
+        sel = (cand1 >= cand0)                        # Alg.1: ties -> i''
+        new = jnp.where(sel, cand1, cand0)
+        new = new - jnp.max(new)                      # normalize (DESIGN §8)
+        return new, (sel.astype(jnp.int8), jnp.argmax(new).astype(jnp.int32))
+
+    sigma, (sel, amax) = jax.lax.scan(step, sigma0, bm_half)
+    return sel, sigma, amax
+
+
+def viterbi_traceback(sel: jax.Array, trellis: Trellis, start_state: jax.Array,
+                      num_steps: int | None = None):
+    """Alg. 2: serial traceback from ``start_state`` over all of ``sel``.
+
+    Returns (bits, states): bits[t] is the decoded input bit of stage t;
+    states[t] is the survivor state AT stage t (after consuming bit t).
+    """
+    prev_state = jnp.asarray(trellis.prev_state)
+    kshift = trellis.k - 2
+
+    def step(j, sel_t):
+        bit = j >> kshift                             # alpha_in into state j
+        p = sel_t[j].astype(jnp.int32)
+        i = prev_state[j, p]
+        return i, (bit, j)
+
+    _, (bits, states) = jax.lax.scan(
+        step, start_state.astype(jnp.int32), sel.astype(jnp.int32),
+        reverse=True)
+    return bits.astype(jnp.int32), states
+
+
+@partial(jax.jit, static_argnums=(1,))
+def viterbi_decode(llr: jax.Array, trellis: Trellis) -> jax.Array:
+    """Full-sequence decode: (n, beta) llr -> (n,) bits. Table I row (a)."""
+    S = trellis.num_states
+    # the encoder starts in state 0: bias the initial metrics
+    sigma0 = jnp.full((S,), NEG).at[0].set(0.0)
+    sel, sigma, _ = viterbi_forward(llr, trellis, sigma0)
+    start = jnp.argmax(sigma).astype(jnp.int32)
+    bits, _ = viterbi_traceback(sel, trellis, start)
+    return bits

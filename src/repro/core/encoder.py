@@ -1,0 +1,44 @@
+"""Convolutional encoder (paper §II-A, Fig. 1a) in JAX."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .trellis import Trellis
+
+__all__ = ["encode", "encode_bits"]
+
+
+def encode(bits: jax.Array, trellis: Trellis, init_state: int = 0) -> jax.Array:
+    """Encode ``bits`` (n,) {0,1} -> (n, beta) coded bits.
+
+    A lax.scan over the FSM. The per-step work is a table lookup, so this is
+    bound by the scan itself — fine, the encoder is transmitter-side and not
+    the paper's target; it exists to drive the verification system (Fig. 8).
+    """
+    next_state = jnp.asarray(trellis.next_state)      # (S,2)
+    out_bits = jnp.asarray(trellis.out_bits)          # (S,2)
+    beta = trellis.beta
+    shifts = jnp.arange(beta - 1, -1, -1, dtype=jnp.int32)
+
+    def step(state, b):
+        word = out_bits[state, b]
+        ns = next_state[state, b]
+        sym = (word >> shifts) & 1                     # (beta,) MSB=poly0
+        return ns, sym
+
+    _, coded = jax.lax.scan(step, jnp.int32(init_state), bits.astype(jnp.int32))
+    return coded                                       # (n, beta)
+
+
+def encode_bits(bits: np.ndarray, trellis: Trellis) -> np.ndarray:
+    """Numpy reference encoder (used as test oracle against ``encode``)."""
+    state = 0
+    out = np.zeros((len(bits), trellis.beta), dtype=np.int32)
+    for t, b in enumerate(np.asarray(bits, dtype=np.int64)):
+        word = int(trellis.out_bits[state, b])
+        for bi in range(trellis.beta):
+            out[t, bi] = (word >> (trellis.beta - 1 - bi)) & 1
+        state = int(trellis.next_state[state, b])
+    return out

@@ -1,0 +1,86 @@
+"""Framed (tiled) parallel Viterbi decoding (paper §III Fig. 2, §IV).
+
+The n-stage stream is cut into F = ceil(n/f) frames. Frame m decodes output
+stages [m*f, (m+1)*f) but *processes* stages [m*f - v1, m*f + f + v2): the
+left overlap v1 warms up the path metrics, the right overlap v2 lets the
+survivor path converge before the kept region (paper Fig. 2b). Frames are
+embarrassingly parallel: vmap here, grid axis in the Pallas kernel, and the
+sharded axis in the multi-pod launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decoder import viterbi_forward
+from .traceback import parallel_traceback, serial_traceback
+from .trellis import Trellis
+
+__all__ = ["FrameSpec", "frame_llr", "decode_frame", "framed_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameSpec:
+    """Tiling parameters (paper notation)."""
+    f: int = 256          # kept stages per frame
+    v1: int = 20          # left overlap (warm-up)
+    v2: int = 20          # right overlap (traceback convergence)
+    f0: int = 0           # subframe length for parallel traceback (0 = serial)
+    v2s: int = 0          # subframe overlap (parallel traceback)
+    start: str = "boundary"   # parallel-traceback start-state strategy
+
+    @property
+    def frame_len(self) -> int:       # L = v1 + f + v2
+        return self.v1 + self.f + self.v2
+
+    @property
+    def parallel_tb(self) -> bool:
+        return self.f0 > 0
+
+    def num_frames(self, n: int) -> int:
+        return -(-n // self.f)
+
+    def validate(self):
+        if self.parallel_tb:
+            assert self.f % self.f0 == 0, "f must be a multiple of f0"
+            assert self.v2s <= self.v2, "subframe overlap must fit in v2"
+
+
+def frame_llr(llr: jax.Array, spec: FrameSpec) -> jax.Array:
+    """(n, beta) -> (F, L, beta) overlapping frames, zero-padded at edges.
+
+    Zero LLR is neutral to the metrics — identical to how de-puncturing
+    treats erased symbols (paper §IV-E), so edge padding is BER-safe.
+    """
+    n, beta = llr.shape
+    F = spec.num_frames(n)
+    pad_r = F * spec.f + spec.v2 - n
+    padded = jnp.pad(llr, ((spec.v1, pad_r), (0, 0)))
+    starts = jnp.arange(F) * spec.f
+    idx = starts[:, None] + jnp.arange(spec.frame_len)[None, :]
+    return padded[idx]                                # (F, L, beta)
+
+
+def decode_frame(llr_frame: jax.Array, trellis: Trellis,
+                 spec: FrameSpec) -> jax.Array:
+    """Decode one (L, beta) frame -> (f,) bits. Pure-JAX reference path."""
+    sel, sigma, amax = viterbi_forward(llr_frame, trellis)  # uniform sigma0
+    if spec.parallel_tb:
+        return parallel_traceback(sel, amax, trellis, spec.v1, spec.f,
+                                  spec.f0, spec.v2s, spec.start)
+    start = jnp.argmax(sigma).astype(jnp.int32)
+    return serial_traceback(sel, trellis, start, spec.v1, spec.f)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def framed_decode(llr: jax.Array, trellis: Trellis, spec: FrameSpec,
+                  n_out: int | None = None) -> jax.Array:
+    """Full framed decode: (n, beta) llr -> (n,) bits (vmap over frames)."""
+    spec.validate()
+    n = llr.shape[0] if n_out is None else n_out
+    frames = frame_llr(llr, spec)                     # (F, L, beta)
+    bits = jax.vmap(lambda fr: decode_frame(fr, trellis, spec))(frames)
+    return bits.reshape(-1)[:n]

@@ -1,0 +1,37 @@
+"""Branch metrics (paper §II-B eq. 2 and §IV-B optimizations).
+
+delta_t(o) = sum_b (-1)^{o[b]} * llr_t[b]   for an output word o (beta bits).
+
+Per stage there are only 2^beta distinct metrics ("repetitive patterns"),
+and for standard codes delta(~o) = -delta(o) (eq. 8), so only 2^(beta-1)
+values need to be computed/stored (eq. 9) — half the shared-memory (VMEM)
+footprint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .trellis import Trellis
+
+__all__ = ["branch_metrics_full", "branch_metrics_half", "expand_half"]
+
+
+def branch_metrics_full(llr: jax.Array, trellis: Trellis) -> jax.Array:
+    """(n, beta) llr -> (n, 2^beta) metrics for every output word (eq. 7)."""
+    signs = jnp.asarray(trellis.out_signs)            # (2^beta, beta)
+    return llr.astype(jnp.float32) @ signs.T          # (n, 2^beta)
+
+
+def branch_metrics_half(llr: jax.Array, trellis: Trellis) -> jax.Array:
+    """(n, beta) llr -> (n, 2^(beta-1)) compressed metrics (eqs. 8-9)."""
+    half = 1 << (trellis.beta - 1)
+    signs = jnp.asarray(trellis.out_signs[:half])     # (2^(beta-1), beta)
+    return llr.astype(jnp.float32) @ signs.T
+
+
+def expand_half(bm_half: jax.Array, trellis: Trellis) -> jax.Array:
+    """Reconstruct the full (.., 2^beta) table from the compressed half."""
+    idx = jnp.asarray(trellis.bm_index)               # (2^beta,)
+    sgn = jnp.asarray(trellis.bm_sign).astype(bm_half.dtype)
+    return bm_half[..., idx] * sgn

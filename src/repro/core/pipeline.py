@@ -1,0 +1,64 @@
+"""End-to-end decode API: the paper's full receiver path.
+
+depuncture -> frame -> unified decode (Pallas kernel or pure-JAX reference)
+-> stitch. This is the composable module the rest of the framework (examples,
+benchmarks, multi-pod launch) calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .framed import FrameSpec, framed_decode, frame_llr, decode_frame
+from .puncture import depuncture, check_alignment
+from .trellis import Trellis, STD_K7
+
+__all__ = ["DecoderConfig", "make_decoder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderConfig:
+    """Everything needed to build a decode function."""
+    trellis: Trellis = STD_K7
+    spec: FrameSpec = FrameSpec()
+    rate: str = "1/2"
+    backend: str = "reference"     # 'reference' | 'kernel' | 'kernel_split'
+    interpret: bool = True         # Pallas interpret mode (CPU container)
+
+    def __post_init__(self):
+        if self.rate != "1/2":
+            check_alignment(self.spec.f, self.spec.v1, self.spec.v2, self.rate)
+
+
+def make_decoder(cfg: DecoderConfig):
+    """Returns decode(llr_or_stream, n) -> (n,) bits, jitted."""
+
+    if cfg.backend == "reference":
+        def _decode_frames(frames):
+            return jax.vmap(lambda fr: decode_frame(fr, cfg.trellis, cfg.spec))(frames)
+    elif cfg.backend in ("kernel", "kernel_split"):
+        from ..kernels import ops as kops
+        unified = cfg.backend == "kernel"
+
+        def _decode_frames(frames):
+            return kops.viterbi_decode_frames(
+                frames, cfg.trellis, cfg.spec, unified=unified,
+                interpret=cfg.interpret)
+    else:
+        raise ValueError(cfg.backend)
+
+    @partial(jax.jit, static_argnums=(1,))
+    def decode(stream: jax.Array, n: int) -> jax.Array:
+        """stream: punctured soft symbols (m,) for rate!=1/2, or (n,beta)."""
+        if cfg.rate != "1/2":
+            llr = depuncture(stream, cfg.rate, n)
+        else:
+            llr = stream if stream.ndim == 2 else stream.reshape(n, -1)
+        frames = frame_llr(llr, cfg.spec)             # (F, L, beta)
+        bits = _decode_frames(frames)                 # (F, f)
+        return bits.reshape(-1)[:n]
+
+    return decode

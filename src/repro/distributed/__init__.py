@@ -1,0 +1,3 @@
+from .sharding import (param_specs, param_shardings, batch_specs,
+                       cache_specs, moment_specs)  # noqa: F401
+from . import compress                             # noqa: F401

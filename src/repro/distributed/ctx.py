@@ -1,0 +1,68 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launch layer declares which mesh axes carry
+the batch dim (('pod','data') / ('data',)) and model code pins activations
+to it at layer boundaries via ``constrain_batch``. Without this, GSPMD
+propagates the FSDP param sharding INTO activations (observed in the first
+dry-run: batch replicated, d_model sharded over 'data' — catastrophic for
+both memory and collectives). No-op when no axes are set (tests, CPU runs).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES = None
+_SEQ_AXES = None
+_DATA_SIZE = None    # product of the data-like axis sizes (divisibility)
+
+
+def set_batch_axes(axes):
+    """axes: None | str | tuple — mesh axes of the global batch dim."""
+    global _BATCH_AXES
+    _BATCH_AXES = axes
+
+
+def set_seq_axes(axes):
+    """Sequence-parallel residual stream: mesh axes of dim 1 (seq) of
+    (B, S, d) activations. Used when the batch is too small to cover the
+    data-like axes (e.g. prefill_32k at batch 32 on 256 chips)."""
+    global _SEQ_AXES
+    _SEQ_AXES = axes
+
+
+def set_data_size(n):
+    global _DATA_SIZE
+    _DATA_SIZE = n
+
+
+def get_data_size():
+    return _DATA_SIZE
+
+
+def get_batch_axes():
+    return _BATCH_AXES
+
+
+@contextlib.contextmanager
+def batch_axes(axes):
+    prev = _BATCH_AXES
+    set_batch_axes(axes)
+    try:
+        yield
+    finally:
+        set_batch_axes(prev)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 of ``x`` to the batch axes (+ dim 1 to the seq axes when
+    sequence parallelism is on), rest unconstrained."""
+    if (_BATCH_AXES is None and _SEQ_AXES is None) or x.ndim == 0:
+        return x
+    rest = [None] * (x.ndim - 1)
+    if _SEQ_AXES is not None and x.ndim >= 3:
+        rest[0] = _SEQ_AXES
+    spec = P(_BATCH_AXES, *rest)
+    return jax.lax.with_sharding_constraint(x, spec)

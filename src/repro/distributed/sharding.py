@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules -> NamedSharding trees.
+
+TP over 'model' (heads / d_ff / experts / vocab), FSDP-style weight sharding
+over 'data', batch over ('pod', 'data'). Rules are right-aligned to the
+trailing dims so the stacked layer axis (leading R) stays unsharded; GSPMD
+pads non-divisible dims (e.g. 40 heads on 16-way model axis) internally.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
+           "moment_specs"]
+
+# (regex on the leaf's dotted path, spec for the TRAILING dims)
+_RULES = [
+    (r"\btok$",                       ("model", "data")),
+    (r"\bhead$",                      ("data", "model")),
+    (r"\b(wq|wk|wv|wqkv|wg|wu|in_proj)$",  ("data", "model")),
+    (r"\b(wo|wd|out_proj)$",          ("model", "data")),
+    (r"\brouter$",                    ("data", None)),
+    (r"\b(ewg|ewu)$",                 ("model", "data", None)),
+    (r"\bewd$",                       ("model", None, "data")),
+    (r"\b(bq|bk|bv|bqkv|conv_b|A_log|dt_bias)$", ("model",)),
+    (r"\bD$",                         ("model",)),
+    (r"\bconv_w$",                    (None, "model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return ".".join(parts)
+
+
+def _spec_for(path: str, ndim: int, data_axes) -> P:
+    for pat, trailing in _RULES:
+        if re.search(pat, path):
+            if len(trailing) > ndim:       # scalar-ish leaf, replicate
+                return P()
+            axes = [None] * (ndim - len(trailing)) + [
+                (data_axes if a == "data" else a) for a in trailing]
+            return P(*axes)
+    return P()                             # norms / scalars: replicated
+
+
+def param_specs(params, shard_data: bool = True, data_axes="data",
+                strategy: str = "tp") -> "jax.tree":
+    """Tree of PartitionSpec matching ``params``.
+
+    strategy:
+      'tp'   — TP over 'model' (heads/ffn/experts/vocab) + FSDP over 'data'
+               (the baseline).
+      'fsdp' — pure FSDP/ZeRO-3: weight matrices sharded over
+               ('data','model') on their (previously-)data dim, no TP
+               contraction all-reduces. Expert dims (ewg/ewu/ewd) keep EP
+               over 'model'. Batch then shards over BOTH axes.
+    shard_data=False turns off the FSDP dimension (pure-TP params), used by
+    small-model tests and the compressed-DP path.
+    """
+    fsdp_axes = (tuple(data_axes) if isinstance(data_axes, tuple)
+                 else (data_axes,)) + ("model",)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        spec = _spec_for(name, leaf.ndim, data_axes)
+        if strategy == "fsdp" and not re.search(r"\b(ewg|ewu|ewd)$", name):
+            spec = P(*[fsdp_axes if a == data_axes or a == "data"
+                       else (None if a == "model" else a) for a in spec])
+        if not shard_data:
+            spec = P(*[None if a in ("data", data_axes) else a for a in spec])
+        return spec
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def moment_specs(params, zero_pod: bool = False):
+    """Optimizer-moment specs: same as params, optionally sharding the
+    'data'-sharded dim over ('pod','data') (ZeRO over pods)."""
+    base = param_specs(params,
+                       data_axes=("pod", "data") if zero_pod else "data")
+    return base
+
+
+def param_shardings(mesh: Mesh, params, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, **kw))
+
+
+def batch_specs(batch, mesh: Mesh, strategy: str = "tp"):
+    """Batch dim over all data-like mesh axes present (replicated when the
+    global batch doesn't divide them, e.g. long_500k's batch of 1). In
+    'fsdp' strategy the 'model' axis is data-like too."""
+    names = ("pod", "data", "model") if strategy == "fsdp" else ("pod", "data")
+    axes = tuple(a for a in names if a in mesh.axis_names)
+    ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+    dsize = 1
+    for a in names:
+        dsize *= mesh.shape.get(a, 1)
+
+    def one(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dsize:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache, mesh: Mesh):
+    """Decode-state shardings.
+
+    KV caches (R, B, S, KV, hd): batch over data axes (when divisible);
+    KV heads over 'model' when divisible, else the SEQUENCE dim over
+    'model' (sequence-parallel cache — the long_500k path for archs whose
+    kv count doesn't divide the model axis).
+    SSM states (R, B, H, N, P): heads over 'model'. Conv states (R, B, K,
+    C): channels over 'model'.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+    msize = mesh.shape.get("model", 1)
+    dsize = 1
+    for a in ("pod", "data"):
+        dsize *= mesh.shape.get(a, 1)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if leaf.ndim <= 1 or "idx" in name:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        bdim = 1 if leaf.ndim >= 3 else 0
+        if leaf.shape[bdim] % dsize == 0:
+            spec[bdim] = ax
+        last = name.split(".")[-1]
+        if last in ("k", "v", "xk", "xv") and leaf.ndim == 5:
+            if leaf.shape[3] % msize == 0:
+                spec[3] = "model"          # kv heads
+            elif leaf.shape[2] % msize == 0:
+                spec[2] = "model"          # sequence-parallel cache
+        elif last == "ssm" and leaf.ndim == 5:        # (R,B,H,N,P)
+            if leaf.shape[2] % msize == 0:
+                spec[2] = "model"
+        elif last == "conv" and leaf.ndim == 4:       # (R,B,K,C)
+            if leaf.shape[3] % msize == 0:
+                spec[3] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache)

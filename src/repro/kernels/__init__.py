@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (validated with
+interpret=True on CPU; see EXAMPLE.md for the layout convention)."""
+from . import ops, ref  # noqa: F401

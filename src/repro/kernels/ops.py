@@ -1,0 +1,66 @@
+"""Jitted public wrappers around the Pallas Viterbi kernels.
+
+Handles frame-count padding to the tile size, selects unified vs split
+(forward kernel + separate traceback) execution, and exposes one call the
+rest of the framework uses: ``viterbi_decode_frames``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.framed import FrameSpec
+from ..core.traceback import parallel_traceback, serial_traceback
+from ..core.trellis import Trellis
+from .viterbi_fwd import forward_frames
+from .viterbi_unified import unified_decode_frames
+
+__all__ = ["viterbi_decode_frames"]
+
+
+def _pad_frames(frames: jax.Array, tile: int):
+    F = frames.shape[0]
+    Fp = -(-F // tile) * tile
+    if Fp != F:
+        frames = jnp.pad(frames, ((0, Fp - F), (0, 0), (0, 0)))
+    return frames, F
+
+
+@partial(jax.jit, static_argnames=("trellis", "spec", "unified",
+                                   "frames_per_tile", "interpret"))
+def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
+                          spec: FrameSpec, *, unified: bool = True,
+                          frames_per_tile: int = 8,
+                          interpret: bool = True) -> jax.Array:
+    """(F, L, beta) LLR frames -> (F, f) decoded bits.
+
+    unified=True  : the paper's single-kernel path (survivors in VMEM only).
+    unified=False : prior-work baseline — forward kernel streams survivors
+                    to HBM, traceback runs as a separate (vmapped) step.
+    """
+    spec.validate()
+    # serial traceback == one subframe spanning the kept region (DESIGN §2)
+    f0 = spec.f0 if spec.parallel_tb else spec.f
+    v2s = spec.v2s if spec.parallel_tb else spec.v2
+    start = spec.start if spec.parallel_tb else "boundary"
+
+    padded, F = _pad_frames(frames, frames_per_tile)
+    if unified:
+        bits = unified_decode_frames(
+            padded, trellis=trellis, v1=spec.v1, f=spec.f, v2=spec.v2,
+            f0=f0, v2s=v2s, start=start, frames_per_tile=frames_per_tile,
+            interpret=interpret)
+        return bits[:F]
+
+    sel, amax = forward_frames(padded, trellis=trellis,
+                               frames_per_tile=frames_per_tile,
+                               interpret=interpret)
+    sel, amax = sel[:F], amax[:F]                    # HBM round-trip
+    if spec.parallel_tb:
+        tb = lambda s, a: parallel_traceback(s, a, trellis, spec.v1, spec.f,
+                                             spec.f0, spec.v2s, spec.start)
+        return jax.vmap(tb)(sel, amax)
+    tb = lambda s, a: serial_traceback(s, trellis, a[-1], spec.v1, spec.f)
+    return jax.vmap(tb)(sel, amax)

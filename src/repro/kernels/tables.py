@@ -1,0 +1,54 @@
+"""In-kernel trellis table construction.
+
+Pallas kernels may not capture array constants, so the (small) trellis
+tables are rebuilt INSIDE the kernel from iota + static python ints
+(k, polys). XLA constant-folds all of this at compile time — the kernel
+body still sees compile-time-constant vectors, exactly like baking numpy
+tables would, but without captured-constant plumbing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.trellis import Trellis
+
+__all__ = ["kernel_tables"]
+
+
+def _parity(x: jax.Array, k: int) -> jax.Array:
+    """Popcount-parity of k-bit ints (static unroll — k <= 16)."""
+    out = jnp.zeros_like(x)
+    for b in range(k):
+        out = out ^ ((x >> b) & 1)
+    return out
+
+
+def kernel_tables(trellis: Trellis):
+    """Build {prev (S,2), bm_idx_p, bm_sgn_p [(S,) x2], signs_half} via iota."""
+    k, beta, polys = trellis.k, trellis.beta, trellis.polys
+    S = 1 << (k - 1)
+    half = 1 << (beta - 1)
+    mask = (1 << beta) - 1
+    j = jax.lax.iota(jnp.int32, S)
+    binput = j >> (k - 2)                           # input bit INTO state j
+
+    prev, idx_p, sgn_p = [], [], []
+    for p in (0, 1):
+        prev_p = ((j << 1) & (S - 1)) | p           # butterfly predecessor
+        w = (binput << (k - 1)) | prev_p            # k-bit encoder word
+        oword = jnp.zeros_like(j)
+        for bi, g in enumerate(polys):
+            oword = oword | (_parity(w & g, k) << (beta - 1 - bi))
+        # symmetry compression (eqs. 8-9): index into 2^(beta-1) table + sign
+        idx = jnp.where(oword < half, oword, mask ^ oword)
+        sgn = jnp.where(oword < half, 1.0, -1.0).astype(jnp.float32)
+        prev.append(prev_p)
+        idx_p.append(idx)
+        sgn_p.append(sgn)
+
+    o = jax.lax.iota(jnp.int32, half)[:, None]      # (half, 1)
+    bi = jax.lax.iota(jnp.int32, beta)[None, :]     # (1, beta)
+    bits = (o >> (beta - 1 - bi)) & 1
+    signs_half = (1.0 - 2.0 * bits).astype(jnp.float32)   # (half, beta)
+    return prev, idx_p, sgn_p, signs_half

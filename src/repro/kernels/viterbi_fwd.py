@@ -1,0 +1,72 @@
+"""Forward-only Viterbi kernel — the prior-work baseline (Table I row b).
+
+Same ACS as the unified kernel, but the survivor selectors are STREAMED TO
+HBM (the GPU papers' "global memory") and traced back by a separate step.
+Exists so the unified kernel's memory-traffic win is measurable:
+  survivor-path HBM traffic here = F * L * S * 1 byte  (written then re-read)
+  survivor-path HBM traffic in the unified kernel = 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.trellis import Trellis
+from .tables import kernel_tables
+
+__all__ = ["forward_frames"]
+
+
+def _kernel(llr_ref, sel_ref, amax_ref, bm_ref, *, trellis: Trellis, L: int):
+    S = trellis.num_states
+    FT = llr_ref.shape[0]
+    perm, idx_p, sgn_p, signs_half = kernel_tables(trellis)
+
+    llr = llr_ref[...].astype(jnp.float32)
+    bm_ref[...] = jnp.einsum("flb,hb->lfh", llr, signs_half)
+
+    def acs_step(t, sigma):
+        bmh = bm_ref[t]
+        cand = []
+        for p in (0, 1):
+            s_prev = jnp.take(sigma, perm[p], axis=1)
+            bm = jnp.take(bmh, idx_p[p], axis=1) * sgn_p[p]
+            cand.append(s_prev + bm)
+        sel = (cand[1] >= cand[0])
+        sigma = jnp.where(sel, cand[1], cand[0])
+        sigma = sigma - jnp.max(sigma, axis=1, keepdims=True)
+        sel_ref[:, t, :] = sel.astype(jnp.int8)      # -> HBM-backed output
+        amax_ref[:, t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
+        return sigma
+
+    jax.lax.fori_loop(0, L, acs_step, jnp.zeros((FT, S), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("trellis", "frames_per_tile",
+                                             "interpret"))
+def forward_frames(frames: jax.Array, *, trellis: Trellis,
+                   frames_per_tile: int = 8, interpret: bool = True):
+    """(F, L, beta) llr -> (sel (F, L, S) int8, amax (F, L) int32) in HBM."""
+    F, L, beta = frames.shape
+    FT = frames_per_tile
+    assert F % FT == 0, (F, FT)
+    S = trellis.num_states
+    half = 1 << (trellis.beta - 1)
+
+    kern = functools.partial(_kernel, trellis=trellis, L=L)
+    return pl.pallas_call(
+        kern,
+        grid=(F // FT,),
+        in_specs=[pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((FT, L, S), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((FT, L), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((F, L, S), jnp.int8),
+                   jax.ShapeDtypeStruct((F, L), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((L, FT, half), jnp.float32)],
+        interpret=interpret,
+    )(frames)

@@ -1,0 +1,147 @@
+"""Unified Viterbi kernel (paper §IV-A, Alg. 3) as a Pallas TPU kernel.
+
+The paper's central idea: fuse the forward procedure (branch metrics + ACS +
+survivor paths) and the backward procedure (parallel traceback + decode) into
+ONE kernel so the survivor-path matrix lives in on-chip memory (GPU shared
+memory -> TPU **VMEM scratch**) and never touches HBM. The only HBM traffic
+is the LLR block in and the decoded bits out — Table I row (c): global memory
+for intermediate data = none.
+
+TPU mapping (DESIGN.md §2):
+  * grid = frame tiles; each grid step decodes ``FT`` frames entirely in VMEM
+    (FT plays the role of "multiple frames per block" from §IV-F: it fills
+    the 8 sublanes, and packs the S=64 states onto the lane dimension).
+  * the ACS butterfly is arithmetic, not gathers: prev(j,p) = ((j<<1)&(S-1))|p,
+    so the traceback pointer chase is pure vector integer ops; the only
+    gathers are static-index permutations of the path-metric vector.
+  * branch metrics are precomputed coalesced (paper Fig. 7) in the
+    symmetry-compressed 2^(beta-1) form (eq. 9) into VMEM scratch.
+  * the parallel traceback advances all ``nsub`` subframe cursors of all
+    ``FT`` frames in lock-step: the backward pass costs f0+v2s vector steps.
+
+VMEM budget per grid step (K=7, L=v1+f+v2≈340, FT=8, f0+v2s≈77):
+  llr block       FT*L*beta*4      ≈  21 KiB
+  bm (compressed) L*FT*2^(b-1)*4   ≈  21 KiB
+  sel (survivors) L*FT*S*4         ≈ 680 KiB   <- the array the paper keeps
+  amax            L*FT*4           ≈  10 KiB      out of global memory
+  tb bits         (f0+v2s)*FT*nsub ≈  20 KiB
+  total ≈ 0.75 MiB of ~16 MiB VMEM -> ~21 concurrent tiles' worth of
+  headroom; FT and the grid give Mosaic room to double-buffer the LLR DMA.
+  (sel could be bit-packed 32x as on GPU; int32 keeps the interpret oracle
+  simple and still fits with large margin — see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.trellis import Trellis
+from .tables import kernel_tables
+
+__all__ = ["unified_decode_frames"]
+
+
+def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
+            trellis: Trellis, v1: int, f: int, v2: int, f0: int, v2s: int,
+            start: str):
+    S = trellis.num_states
+    kshift = trellis.k - 2
+    half = 1 << (trellis.beta - 1)
+    L = v1 + f + v2
+    FT = llr_ref.shape[0]
+    nsub = f // f0
+
+    # trellis tables, constant-folded from iota (see tables.py)
+    perm, idx_p, sgn_p, signs_half = kernel_tables(trellis)
+
+    # ---- phase 1: coalesced, symmetry-compressed branch metrics (Fig. 7) --
+    llr = llr_ref[...].astype(jnp.float32)           # (FT, L, beta)
+    bm_ref[...] = jnp.einsum("flb,hb->lfh", llr, signs_half)   # (L, FT, half)
+
+    # ---- phase 2: ACS over stages, survivors stay in VMEM (Alg. 3) -------
+    def acs_step(t, sigma):                          # sigma: (FT, S)
+        bmh = bm_ref[t]                              # (FT, half)
+        cand = []
+        for p in (0, 1):
+            s_prev = jnp.take(sigma, perm[p], axis=1)              # (FT, S)
+            bm = jnp.take(bmh, idx_p[p], axis=1) * sgn_p[p]        # (FT, S)
+            cand.append(s_prev + bm)
+        sel = (cand[1] >= cand[0])                   # ties -> i'' (Alg. 1)
+        sigma = jnp.where(sel, cand[1], cand[0])
+        sigma = sigma - jnp.max(sigma, axis=1, keepdims=True)      # normalize
+        sel_ref[t] = sel.astype(jnp.int32)
+        amax_ref[t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
+        return sigma
+
+    sigma0 = jnp.zeros((FT, S), jnp.float32)
+    jax.lax.fori_loop(0, L, acs_step, sigma0)
+
+    # ---- phase 3: parallel traceback (paper §IV-D, Fig. 5) ---------------
+    sel_all = sel_ref[...]                           # (L, FT, S) — VMEM read
+    amax_all = amax_ref[...]                         # (L, FT)
+    q = jnp.arange(nsub, dtype=jnp.int32)
+    e = v1 + (q + 1) * f0 - 1 + v2s                  # chase starts, (nsub,)
+    if start == "boundary":
+        states = jnp.take(amax_all, e, axis=0)       # (nsub, FT)
+    else:                                            # 'fixed' (Fig. 11)
+        states = jnp.zeros((nsub, FT), jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (nsub, FT, S), 2)
+
+    def tb_step(r, states):                          # states: (nsub, FT)
+        t = e - r
+        tb_ref[r] = (states >> kshift)               # decoded bits at stage t
+        rows = jnp.take(sel_all, t, axis=0)          # (nsub, FT, S)
+        onehot = (states[..., None] == lane).astype(jnp.int32)
+        p = jnp.sum(rows * onehot, axis=2)           # selector bit, (nsub,FT)
+        return ((states << 1) & (S - 1)) | p         # butterfly arithmetic
+
+    jax.lax.fori_loop(0, f0 + v2s, tb_step, states)
+
+    # ---- phase 4: assemble + single coalesced HBM write ------------------
+    tb = tb_ref[...]                                 # (f0+v2s, nsub, FT)
+    kept = tb[v2s:][::-1]                            # (f0, nsub, FT) stage-asc
+    out = jnp.transpose(kept, (2, 1, 0))             # (FT, nsub, f0)
+    out_ref[...] = out.reshape(FT, f).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "trellis", "v1", "f", "v2", "f0", "v2s", "start", "frames_per_tile",
+    "interpret"))
+def unified_decode_frames(frames: jax.Array, *, trellis: Trellis, v1: int,
+                          f: int, v2: int, f0: int, v2s: int,
+                          start: str = "boundary", frames_per_tile: int = 8,
+                          interpret: bool = True) -> jax.Array:
+    """Decode (F, L, beta) LLR frames -> (F, f) bits with the unified kernel.
+
+    F must be a multiple of ``frames_per_tile`` (ops.py pads).
+    """
+    F, L, beta = frames.shape
+    assert L == v1 + f + v2, (L, v1, f, v2)
+    assert f % f0 == 0 and v2s <= v2
+    FT = frames_per_tile
+    assert F % FT == 0, (F, FT)
+    S = trellis.num_states
+    half = 1 << (trellis.beta - 1)
+    nsub = f // f0
+
+    kern = functools.partial(_kernel, trellis=trellis, v1=v1, f=f, v2=v2,
+                             f0=f0, v2s=v2s, start=start)
+    return pl.pallas_call(
+        kern,
+        grid=(F // FT,),
+        in_specs=[pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((FT, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, f), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((L, FT, S), jnp.int32),       # survivor selectors
+            pltpu.VMEM((L, FT), jnp.int32),          # per-stage argmax states
+            pltpu.VMEM((L, FT, half), jnp.float32),  # compressed BMs (eq. 9)
+            pltpu.VMEM((f0 + v2s, nsub, FT), jnp.int32),  # traceback bits
+        ],
+        interpret=interpret,
+    )(frames)

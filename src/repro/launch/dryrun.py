@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks at first init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or 2x16x16
+multi-pod), the ShapeDtypeStruct inputs (never allocated), the sharded
+train/prefill/decode step, compiles it AOT, and records:
+  * memory_analysis()  — proves the cell fits per-chip HBM
+  * cost_analysis()    — per-chip HLO FLOPs / bytes for §Roofline
+  * collective bytes   — parsed from the partitioned HLO
+Results go to experiments/dryrun/<cell>.json and are summarized into
+EXPERIMENTS.md by benchmarks/report.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ARCH_IDS, SHAPES, ModelConfig, ShapeSpec, get_config
+from ..distributed.sharding import (batch_specs, cache_specs,
+                                    param_shardings)
+from ..models.model import batch_spec, build_model
+from ..optim import adamw, constant
+from ..train.step import make_train_step
+from .mesh import HW, make_production_mesh
+from . import roofline as RL
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md §5)
+SKIPS = {(a, "long_500k") for a in ARCH_IDS} - {
+    ("mamba2_2p7b", "long_500k"), ("jamba15_large", "long_500k")}
+
+
+def cells(include_skipped: bool = False):
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            if (arch, shape) in SKIPS and not include_skipped:
+                continue
+            yield arch, shape
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    spec = batch_spec(cfg, shape.seq_len, shape.global_batch, shape.kind)
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in spec.items()}
+
+
+def active_params(params_shape, cfg: ModelConfig) -> int:
+    """N for MODEL_FLOPS = 6*N*D: active (MoE top-k of E) non-embedding."""
+    import numpy as np
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        name = ".".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        n = int(np.prod(leaf.shape))
+        last = name.split(".")[-1]
+        if last in ("tok", "head"):
+            continue                       # 6ND convention: no embeddings
+        if last in ("ewg", "ewu", "ewd") and cfg.moe:
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total
+
+
+def model_flops(cfg, params_shape, shape: ShapeSpec) -> float:
+    n = active_params(params_shape, cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n * tokens
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  remat: str = "full", donate: bool = True,
+                  strategy: str = "tp", moe_cap: float = 0.0,
+                  attn_chunk: int = 0):
+    cfg = get_config(arch)
+    import dataclasses
+    if moe_cap and cfg.moe:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_per_choice=moe_cap))
+    if attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..distributed.ctx import set_batch_axes, set_seq_axes, set_data_size
+    gb = SHAPES[shape_name].global_batch
+    dsize = 512 if multi_pod else 256
+    if strategy != "fsdp":
+        dsize //= 16                    # model axis carries TP
+    baxes = (("pod", "data", "model") if multi_pod else ("data", "model")) \
+        if strategy == "fsdp" else \
+        (("pod", "data") if multi_pod else "data")
+    set_seq_axes(None)
+    set_data_size(dsize if strategy != "fsdp" else dsize // 16)
+    if gb % dsize == 0:
+        set_batch_axes(baxes)
+    elif strategy == "fsdp" and gb % (dsize // 16) == 0:
+        # batch too small for all data-like axes: batch over data/pod,
+        # SEQUENCE over 'model' (sequence parallelism — prefill cells)
+        set_batch_axes(("pod", "data") if multi_pod else "data")
+        set_seq_axes("model")
+    else:
+        set_batch_axes(None)
+    bundle = build_model(cfg, remat=remat)
+    rng = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(bundle.init, rng)
+    psh = param_shardings(mesh, params_shape, strategy=strategy)
+    specs = input_specs(cfg, shape)
+    with mesh:
+        bsh = batch_specs(specs, mesh, strategy=strategy)
+        if shape.kind == "train":
+            opt = adamw(constant(1e-4))
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            osh = param_shardings(mesh, opt_shape["m"], strategy=strategy)
+            osh_full = {"m": osh, "v": osh,
+                        "step": jax.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec())}
+            step = make_train_step(bundle, opt)
+            jitted = jax.jit(step, in_shardings=(psh, osh_full, bsh),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+        elif shape.kind == "prefill":
+            jitted = jax.jit(bundle.prefill, in_shardings=(psh, bsh))
+            lowered = jitted.lower(params_shape, specs)
+        else:                              # decode
+            cache_shape = jax.eval_shape(
+                lambda: bundle.init_cache(params_shape, shape.global_batch,
+                                          shape.seq_len))
+            csh = cache_specs(cache_shape, mesh)
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tsh = batch_specs({"t": tok}, mesh)["t"]
+            jitted = jax.jit(bundle.decode, in_shardings=(psh, tsh, csh),
+                             donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_shape, tok, cache_shape)
+    mf = model_flops(cfg, params_shape, shape)
+    return lowered, mesh, mf, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             remat: str = "full", tag: str = "", strategy: str = "tp",
+             moe_cap: float = 0.0, attn_chunk: int = 0) -> dict:
+    t0 = time.time()
+    lowered, mesh, mf, cfg = build_lowered(arch, shape_name, multi_pod,
+                                           remat=remat, strategy=strategy,
+                                           moe_cap=moe_cap,
+                                           attn_chunk=attn_chunk)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    chips = mesh.devices.size
+    rl = RL.analyze(compiled, chips, model_flops=mf)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
+           "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+           **rl.row()}
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        name = f"{arch}_{shape_name}_{row['mesh']}{tag}.json"
+        with open(os.path.join(outdir, name), "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+def fmt_row(row: dict) -> str:
+    mem = row.get("peak_memory_per_chip")
+    mem_s = f"{mem/2**30:6.1f}GiB" if mem else "   n/a  "
+    return (f"{row['arch']:22s} {row['shape']:12s} {row['mesh']:8s} "
+            f"tc={row['t_compute_s']:9.3e} tm={row['t_memory_s']:9.3e} "
+            f"tl={row['t_collective_s']:9.3e} bound={row['bottleneck']:10s} "
+            f"mem={mem_s} useful={row.get('useful_ratio') or 0:6.3f} "
+            f"mfu_bound={row.get('mfu_bound') or 0:5.3f} "
+            f"[compile {row['t_compile_s']:.0f}s]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--moe-cap", type=float, default=0.0)
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    todo = (list(cells()) if args.all else
+            [(args.arch, args.shape or "train_4k")])
+    failures = []
+    for arch, shape in todo:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        path = os.path.join(args.out,
+                            f"{arch}_{shape}_{mesh_tag}{args.tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {arch} {shape} (exists)")
+            continue
+        try:
+            row = run_cell(arch, shape, args.multi_pod, args.out,
+                           remat=args.remat, tag=args.tag,
+                           strategy=args.strategy, moe_cap=args.moe_cap,
+                           attn_chunk=args.attn_chunk)
+            print(fmt_row(row), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} {shape}: {e!r}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction (TPU v5e pods: 16x16 = 256 chips/pod).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+class HW:
+    """TPU v5e hardware constants for the roofline (per chip)."""
+    PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+    HBM_BW = 819e9                  # B/s
+    ICI_BW = 50e9                   # B/s per link (~ring bandwidth proxy)
+    HBM_BYTES = 16 * 2**30          # capacity

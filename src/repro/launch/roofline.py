@@ -1,0 +1,179 @@
+"""Roofline-term extraction from a compiled (AOT) jax executable.
+
+    compute term    = HLO_FLOPs_global / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes_global / (chips * HBM_bw)
+    collective term = collective_link_bytes_per_chip / link_bw
+
+``cost_analysis()`` on an SPMD-partitioned executable reports PER-DEVICE
+flops/bytes (verified in tests/test_roofline.py), so global = n_devices x
+per-device. Collective bytes are NOT in cost_analysis: we parse the
+partitioned HLO text and sum result-shape bytes of every collective op.
+Per-chip link traffic for a ring algorithm is ~= result bytes for
+all-gather / all-to-all / collective-permute, and ~2x for all-reduce
+(reduce-scatter + all-gather phases). reduce-scatter counts its operand
+(= result x group) once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+from .mesh import HW
+
+__all__ = ["collective_bytes", "Roofline", "analyze"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result type(s) at the start of an HLO instruction line:
+#   %name = bf16[1,2,3]{...} all-gather(...)
+#   %name = (f32[8,128]{..}, f32[8,128]{..}) all-to-all(...)
+_INSTR = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_WEIGHT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(types: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(types):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-op-kind result bytes of all collectives in (partitioned) HLO."""
+    out = {k: 0 for k in _WEIGHT}
+    for m in _INSTR.finditer(hlo_text):
+        types, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(types)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float      # link-weighted
+    coll_breakdown: dict
+    convert_bytes_per_chip: float = 0.0
+    peak_memory_per_chip: Optional[float] = None
+    model_flops: Optional[float] = None      # 6*N*D useful flops (global)
+    xla_flops_oncecounted: float = 0.0       # raw cost_analysis (reference)
+    xla_bytes_oncecounted: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / HW.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HW.HBM_BW
+
+    @property
+    def t_memory_fused(self) -> float:
+        """Memory term assuming TPU fuses dtype converts (lower bound)."""
+        return (self.bytes_per_chip - self.convert_bytes_per_chip) / HW.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / HW.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOP utilization upper bound implied by the roofline."""
+        if not self.model_flops:
+            return None
+        ideal = self.model_flops / (self.chips * HW.PEAK_FLOPS_BF16)
+        return ideal / self.t_bound if self.t_bound else None
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / (self.flops_per_chip * self.chips)
+
+    def row(self) -> dict:
+        return {
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "convert_bytes_per_chip": self.convert_bytes_per_chip,
+            "t_memory_fused_s": self.t_memory_fused,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+            "xla_flops_oncecounted": self.xla_flops_oncecounted,
+            "xla_bytes_oncecounted": self.xla_bytes_oncecounted,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: Optional[float] = None
+            ) -> Roofline:
+    """cost_analysis() counts scan bodies once (tests/test_roofline.py), so
+    the primary numbers come from the trip-count-aware HLO walk in
+    hlo_cost.py; XLA's own numbers are kept in the row for reference."""
+    from .hlo_cost import module_cost
+    text = compiled.as_text()
+    mc = module_cost(text)
+    flops = mc.flops
+    byts = mc.bytes
+    coll = mc.coll_raw
+    coll_w = mc.coll_bytes
+    ca = compiled.cost_analysis() or {}
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = float(getattr(ma, "temp_size_in_bytes", 0)
+                         + getattr(ma, "argument_size_in_bytes", 0)
+                         + getattr(ma, "output_size_in_bytes", 0)
+                         - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = None
+    rl = Roofline(chips=chips, flops_per_chip=flops, bytes_per_chip=byts,
+                  coll_bytes_per_chip=coll_w, coll_breakdown=coll,
+                  convert_bytes_per_chip=mc.convert_bytes,
+                  peak_memory_per_chip=peak, model_flops=model_flops)
+    rl.xla_flops_oncecounted = float(ca.get("flops", 0.0))
+    rl.xla_bytes_oncecounted = float(ca.get("bytes accessed", 0.0))
+    return rl
+
+
+def count_params(params_shape) -> int:
+    import jax
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_shape))

@@ -1,0 +1,94 @@
+"""Batched serving driver: continuous-batching-style loop.
+
+Requests arrive with different prompt lengths; the server prefills each
+prompt (teacher-forced forward), then decodes all live requests in ONE
+batched decode step per token, retiring finished requests and admitting
+queued ones into freed slots — the standard slot-based continuous batching
+used by production LLM servers, here in its synchronous form.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_32b --reduced \
+      --requests 6 --slots 4 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ARCH_IDS, get_config
+from ..models import build_model
+from ..models import transformer as T
+from ..models import layers as L
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_32b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=96)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=True)
+    if cfg.family == "encdec":
+        raise SystemExit("serve demo targets decoder-only archs")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(4, 12)).tolist()
+               for _ in range(args.requests)]
+    queue = list(enumerate(prompts))
+    B = args.slots
+    cache = bundle.init_cache(params, B, args.max_seq)
+    decode = jax.jit(bundle.decode, donate_argnums=(2,))
+
+    live = [None] * B                  # per-slot: (req_id, generated, left)
+    cur = jnp.zeros((B, 1), jnp.int32)
+    done, t0, steps = {}, time.time(), 0
+
+    def admit(slot, cache):
+        nonlocal cur
+        req_id, prompt = queue.pop(0)
+        # prefill the prompt token-by-token into this slot's cache lane
+        # (slot-local prefill; a production server batches these too)
+        for t in prompt[:-1]:
+            tok = cur.at[slot, 0].set(t)
+            _, cache = decode(params, tok, cache)
+        cur = cur.at[slot, 0].set(prompt[-1])
+        live[slot] = (req_id, [], args.gen)
+        return cache
+
+    while queue or any(live):
+        for s in range(B):
+            if live[s] is None and queue:
+                cache = admit(s, cache)
+        logits, cache = decode(params, cur, cache)
+        steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in range(B):
+            if live[s] is None:
+                continue
+            rid, toks, left = live[s]
+            toks.append(int(nxt[s]))
+            cur = cur.at[s, 0].set(int(nxt[s]))
+            if left - 1 == 0:
+                done[rid] = toks
+                live[s] = None
+            else:
+                live[s] = (rid, toks, left - 1)
+    dt = time.time() - t0
+    for rid in sorted(done):
+        print(f"req {rid}: {done[rid][:8]}... ({len(done[rid])} tokens)")
+    total = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests, {total} tokens, "
+          f"{total/dt:.1f} tok/s, {steps} batched decode steps")
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (see dryrun.py).
+
+"""Multi-pod dry-run for the PAPER'S OWN workload: framed Viterbi decoding
+at pod scale.
+
+The paper's tiling scheme is also the distribution strategy (DESIGN.md §4):
+frames are embarrassingly parallel, so the frame axis shards over every
+mesh axis. This lowers + compiles the full receiver (depuncture -> frame ->
+forward ACS -> parallel traceback -> stitch) for the 16x16 and 2x16x16
+meshes and derives the roofline terms, giving the projected pod-level
+decode throughput bound.
+
+  PYTHONPATH=src python -m repro.launch.viterbi_dryrun [--multi-pod]
+      [--nbits 100000000] [--rate 1/2]
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.framed import FrameSpec, decode_frame, frame_llr
+from ..core.trellis import STD_K7
+from .mesh import HW, make_production_mesh
+from . import roofline as RL
+
+
+def build(nbits: int, multi_pod: bool, spec: FrameSpec):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    F = spec.num_frames(nbits)
+    chips = mesh.devices.size
+    F = -(-F // chips) * chips              # pad to an even frame split
+    frames = jax.ShapeDtypeStruct((F, spec.frame_len, 2), jnp.float32)
+    axes = mesh.axis_names
+    fsh = NamedSharding(mesh, P(axes, None, None))
+    osh = NamedSharding(mesh, P(axes, None))
+
+    def decode_all(fr):
+        return jax.vmap(lambda f: decode_frame(f, STD_K7, spec))(fr)
+
+    with mesh:
+        lowered = jax.jit(decode_all, in_shardings=(fsh,),
+                          out_shardings=osh).lower(frames)
+        compiled = lowered.compile()
+    return compiled, mesh, F
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--nbits", type=int, default=100_000_000)
+    ap.add_argument("--f", type=int, default=256)
+    ap.add_argument("--v2", type=int, default=45)
+    ap.add_argument("--f0", type=int, default=32)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    spec = FrameSpec(f=args.f, v1=20, v2=args.v2, f0=args.f0, v2s=args.v2)
+    compiled, mesh, F = build(args.nbits, args.multi_pod, spec)
+    chips = mesh.devices.size
+    rl = RL.analyze(compiled, chips)
+    bits = F * spec.f
+    tput = bits / rl.t_bound / 1e9 if rl.t_bound else float("inf")
+    row = {"arch": "viterbi_k7", "shape": f"decode_{args.nbits//10**6}Mb",
+           "mesh": "2x16x16" if args.multi_pod else "16x16", "tag": "",
+           "t_compile_s": 0.0, **rl.row(), "decoded_bits": bits,
+           "throughput_bound_gbps": tput}
+    print(f"viterbi {row['mesh']}: {F} frames, "
+          f"tc={rl.t_compute:.3e} tm={rl.t_memory:.3e} "
+          f"tl={rl.t_collective:.3e} bound={rl.bottleneck} "
+          f"-> decode bound {tput:.1f} Gb/s "
+          f"({tput*1000/chips:.1f} Mb/s/chip)")
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(
+            args.out, f"viterbi_{row['shape']}_{row['mesh']}.json"),
+            "w") as fp:
+        json.dump(row, fp, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Encoder-decoder model (seamless-m4t): bidirectional encoder over
+precomputed frame embeddings (audio frontend stub per spec) + causal decoder
+with cross-attention. Both stacks scan over layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from ..distributed.ctx import constrain_batch
+
+__all__ = ["init_params", "encode", "decode_train", "init_cache",
+           "decode_step"]
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "ff": L.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[0], cfg),
+            "lnx": jnp.ones((cfg.d_model,), jnp.float32),
+            "xattn": L.init_attention(ks[1], cfg, fused=False),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "ff": L.init_mlp(ks[2], cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, k1, k2 = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+        jax.random.split(k1, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+        jax.random.split(k2, cfg.num_layers))
+    return {"embed": L.init_embed(ke, cfg), "enc": enc, "dec": dec,
+            "ln_enc": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
+           remat: str = "full") -> jax.Array:
+    """frames: (B, S_enc, d_model) precomputed embeddings -> memory."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = frames.astype(cfg.param_dtype)
+
+    def body(x, p):
+        x = constrain_batch(x)
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + L.attention(p["attn"], h, cfg, positions, causal=False)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp(p["ff"], h), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _cross_kv(p, memory, cfg):
+    B, Sm, _ = memory.shape
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    k = (memory @ p["wk"] + p.get("bk", 0)).reshape(B, Sm, KV, hd)
+    v = (memory @ p["wv"] + p.get("bv", 0)).reshape(B, Sm, KV, hd)
+    return k, v
+
+
+def decode_train(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 memory: jax.Array, remat: str = "full"):
+    """Teacher-forced decoder pass -> hidden states (B, S, d)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, p):
+        x = constrain_batch(x)
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + L.attention(p["attn"], h, cfg, positions, causal=True)
+        h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        kv = _cross_kv(p["xattn"], memory, cfg)
+        x = x + L.attention(p["xattn"], h, cfg, positions, kv_override=kv)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp(p["ff"], h), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def init_cache(params: dict, cfg: ModelConfig, batch: int, max_seq: int,
+               memory: jax.Array) -> dict:
+    """Self-attn KV cache + precomputed cross K/V per decoder layer."""
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    Ld = cfg.num_layers
+    shape = (Ld, batch, max_seq, KV, hd)
+    xk, xv = jax.vmap(lambda p: _cross_kv(p["xattn"], memory, cfg))(
+        params["dec"])
+    return {"k": jnp.zeros(shape, cfg.param_dtype),
+            "v": jnp.zeros(shape, cfg.param_dtype),
+            "idx": jnp.zeros((Ld,), jnp.int32), "xk": xk, "xv": xv}
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict):
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, inp):
+        p, c = inp
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, newc = L.attention_decode(p["attn"], h, cfg,
+                                     {"k": c["k"], "v": c["v"],
+                                      "idx": c["idx"]})
+        x = x + y
+        h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        x = x + L.attention(p["xattn"], h, cfg,
+                            positions=jnp.zeros(h.shape[:2], jnp.int32),
+                            kv_override=(c["xk"], c["xv"]))
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp(p["ff"], h)
+        return x, {**newc, "xk": c["xk"], "xv": c["xv"]}
+
+    x, newcache = jax.lax.scan(body, x, (params["dec"], cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.logits(params["embed"], x), newcache

@@ -1,0 +1,360 @@
+"""Dense building blocks: norms, RoPE, GQA attention (full / blockwise /
+decode-with-cache), gated MLP, embeddings, losses.
+
+Conventions:
+  * params are plain dict pytrees; init_* builds one layer's params,
+    transformer.py stacks layers and scans.
+  * activations follow cfg.dtype (bf16); norms/softmax/logsumexp in fp32.
+  * attention is flash-style blockwise (scan over kv chunks, online softmax)
+    whenever seq_len > cfg.attn_chunk, so S x S never materializes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+Init = jax.nn.initializers.normal(stddev=0.02)
+
+
+# ---------------------------------------------------------------- norms ----
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with fp32 statistics but activation-dtype tensors end-to-end.
+
+    custom_vjp so the backward also stays in x.dtype: the autodiff vjp of
+    the fp32-upcast formulation produces fp32 (B,S,d) cotangents that then
+    flow into the TP all-reduces at fp32 — 2x link and HBM traffic for no
+    accuracy benefit (fp32 is kept exactly where it matters: the variance
+    and dw reductions). See EXPERIMENTS.md §Perf iteration 0.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def _rms_fwd(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv32 = jax.lax.rsqrt(var + eps)
+    return x * inv32.astype(x.dtype) * w.astype(x.dtype), (x, w, inv32)
+
+
+def _rms_bwd(eps, res, dy):
+    x, w, inv32 = res
+    inv = inv32.astype(x.dtype)
+    t = dy * w.astype(x.dtype)                       # bf16
+    # d/dx of x*inv: inv*t - x * inv^3 * mean(t*x) (fp32 reduction only)
+    s = jnp.mean((t * x).astype(jnp.float32), axis=-1, keepdims=True)
+    dx = t * inv - x * ((inv32 ** 3) * s).astype(x.dtype)
+    dw = jnp.sum((dy * x * inv).astype(jnp.float32),
+                 axis=tuple(range(dy.ndim - 1))).astype(w.dtype)
+    return dx, dw
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def init_attention(key, cfg: ModelConfig, fused: bool = False) -> dict:
+    """fused=True stores one wqkv matrix: a single projection dot instead
+    of three. REFUTED as a default (§Perf hc3c): under TP the q/k/v split
+    points don't align with the model-axis shard boundaries, so GSPMD
+    inserts resharding collectives (+20%% link bytes on prefill_32k).
+    Kept as an option for FSDP-sharded runs where it is mildly positive."""
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    if fused:
+        p = {"wqkv": Init(ks[0], (d, (H + 2 * KV) * hd), dt),
+             "wo": Init(ks[3], (H * hd, d), dt)}
+        if cfg.qkv_bias:
+            p["bqkv"] = jnp.zeros(((H + 2 * KV) * hd,), dt)
+    else:
+        p = {
+            "wq": Init(ks[0], (d, H * hd), dt),
+            "wk": Init(ks[1], (d, KV * hd), dt),
+            "wv": Init(ks[2], (d, KV * hd), dt),
+            "wo": Init(ks[3], (H * hd, d), dt),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((H * hd,), dt)
+            p["bk"] = jnp.zeros((KV * hd,), dt)
+            p["bv"] = jnp.zeros((KV * hd,), dt)
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((hd,), jnp.float32)
+        p["kn"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+         use_rope: bool = True):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    if "wqkv" in p:
+        qkv = x @ p["wqkv"] + p.get("bqkv", 0)
+        q, k, v = jnp.split(qkv, [H * hd, (H + KV) * hd], axis=-1)
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, S, KV, hd)
+        v = v.reshape(B, S, KV, hd)
+    else:
+        q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, H, hd)
+        k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, S, KV, hd)
+        v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_full(q, k, v, causal: bool, q_pos=None, k_pos=None):
+    """Materializing attention (small S): q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qh = q.reshape(B, Sq, KV, H // KV, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qh, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    if causal:
+        qp = jnp.arange(Sq) if q_pos is None else q_pos
+        kp = jnp.arange(k.shape[1]) if k_pos is None else k_pos
+        mask = qp[:, None] >= kp[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _flash_fwd_impl(q, k, v, chunk: int):
+    """Statically-unrolled q blocks, scan over STRICTLY-LOWER kv blocks
+    (unmasked) + one static-mask diagonal block. Returns (out, lse).
+
+    O(S) memory, zero FLOPs above the diagonal, and no dynamic mask tensors
+    for XLA to hoist into loop carries (which materialized multi-TB pred
+    tensors in the first dry-run; EXPERIMENTS.md §Perf 0a).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nq = S // chunk
+    qb = q.reshape(B, nq, chunk, KV, G, hd)
+    kb = jnp.moveaxis(k.reshape(B, nq, chunk, KV, hd), 1, 0)  # (nq,B,c,KV,hd)
+    vb = jnp.moveaxis(v.reshape(B, nq, chunk, KV, hd), 1, 0)
+    scale = hd ** -0.5
+    pos = jnp.arange(chunk)
+    diag_mask = (pos[:, None] >= pos[None, :])[None, None, None]  # (1,1,1,c,c)
+
+    def partial_softmax(qc, kc, vc, masked):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32)
+        s *= scale
+        if masked:
+            s = jnp.where(diag_mask, s, -1e30)
+        m = s.max(-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(-1)
+        acc = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(qc.dtype),
+                         vc).astype(jnp.float32)
+        return m, l, acc
+
+    def merge(a, b):
+        (ma, la, xa), (mb, lb, xb) = a, b
+        m = jnp.maximum(ma, mb)
+        ca, cb = jnp.exp(ma - m), jnp.exp(mb - m)
+        return m, la * ca + lb * cb, xa * ca[..., None] + xb * cb[..., None]
+
+    outs, lses = [], []
+    for qi in range(nq):                       # static unroll (nq <= 32)
+        qc = qb[:, qi]
+        st = partial_softmax(qc, kb[qi], vb[qi], masked=True)   # diagonal
+        if qi > 0:
+            def kv_step(carry, inp):
+                kc, vc = inp
+                return merge(carry, partial_softmax(qc, kc, vc, False)), None
+            st, _ = jax.lax.scan(kv_step, st, (kb[:qi], vb[:qi]))
+        m, l, acc = st
+        outs.append(jnp.einsum("bkgqh->bqkgh",
+                               acc / l[..., None]).astype(q.dtype))
+        lses.append(m + jnp.log(l))            # (B,KV,G,c) fp32
+    out = jnp.stack(outs, axis=1).reshape(B, S, H, hd)
+    return out, jnp.stack(lses, axis=0)        # lse: (nq,B,KV,G,c)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _sdpa_blockwise(q, k, v, chunk: int):
+    """Flash attention with a flash BACKWARD (custom_vjp): the probability
+    blocks are recomputed from (q,k,lse) in the backward sweep instead of
+    being stashed by autodiff — removes the O(S·c) fp32 p-matrix stashes
+    that dominated the memory roofline term (EXPERIMENTS.md §Perf hc3)."""
+    out, _ = _flash_fwd_impl(q, k, v, chunk)
+    return out
+
+
+def _sdpa_fwd(q, k, v, chunk):
+    out, lse = _flash_fwd_impl(q, k, v, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _sdpa_bwd(chunk, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nq = S // chunk
+    scale = hd ** -0.5
+    qb = q.reshape(B, nq, chunk, KV, G, hd)
+    dob = dout.reshape(B, nq, chunk, KV, G, hd)
+    kb = jnp.moveaxis(k.reshape(B, nq, chunk, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nq, chunk, KV, hd), 1, 0)
+    # D_i = rowsum(dO * O) per (query, head) in fp32 -> (nq,B,KV,G,c)
+    Dfull = jnp.einsum("bshd,bshd->bsh", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    Db = Dfull.reshape(B, nq, chunk, KV, G).transpose(1, 0, 3, 4, 2)
+    pos = jnp.arange(chunk)
+    diag_mask = (pos[:, None] >= pos[None, :])[None, None, None]
+
+    def block_grads(qc, doc, Lc, Dc, kc, vc, masked):
+        """One (q-block, kv-block) pair -> (dq_c f32, dk_c f32, dv_c f32)."""
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32)
+        s *= scale
+        p = jnp.exp(s - Lc[..., None])                   # (B,KV,G,c,c)
+        if masked:
+            p = jnp.where(diag_mask, p, 0.0)
+        dp = jnp.einsum("bqkgh,bskh->bkgqs", doc, vc).astype(jnp.float32)
+        ds = p * (dp - Dc[..., None]) * scale
+        dsl = ds.astype(qc.dtype)
+        pl = p.astype(qc.dtype)
+        dq_c = jnp.einsum("bkgqs,bskh->bqkgh", dsl, kc).astype(jnp.float32)
+        dk_c = jnp.einsum("bkgqs,bqkgh->bskh", dsl, qc).astype(jnp.float32)
+        dv_c = jnp.einsum("bkgqs,bqkgh->bskh", pl, doc).astype(jnp.float32)
+        return dq_c, dk_c, dv_c
+
+    dq = jnp.zeros((B, nq, chunk, KV, G, hd), jnp.float32)
+    dk = jnp.zeros((B, S, KV, hd), jnp.float32)
+    dv = jnp.zeros((B, S, KV, hd), jnp.float32)
+    for qi in range(nq):
+        qc, doc = qb[:, qi], dob[:, qi]
+        Lc, Dc = lse[qi], Db[qi]
+        dq_c, dk_c, dv_c = block_grads(qc, doc, Lc, Dc, kb[qi], vb[qi], True)
+        dk = dk.at[:, qi * chunk:(qi + 1) * chunk].add(dk_c)
+        dv = dv.at[:, qi * chunk:(qi + 1) * chunk].add(dv_c)
+        if qi > 0:
+            def kv_step(dq_acc, inp):
+                kc, vc = inp
+                a, b, c = block_grads(qc, doc, Lc, Dc, kc, vc, False)
+                return dq_acc + a, (b, c)
+            dq_c, (dks, dvs) = jax.lax.scan(kv_step, dq_c,
+                                            (kb[:qi], vb[:qi]))
+            # dks: (qi, B, chunk, KV, hd) -> positions [0, qi*chunk)
+            dk = dk.at[:, :qi * chunk].add(
+                jnp.moveaxis(dks, 0, 1).reshape(B, qi * chunk, KV, hd))
+            dv = dv.at[:, :qi * chunk].add(
+                jnp.moveaxis(dvs, 0, 1).reshape(B, qi * chunk, KV, hd))
+        dq = dq.at[:, qi].set(dq_c)
+    return (dq.reshape(B, S, H, hd).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+_sdpa_blockwise.defvjp(_sdpa_fwd, _sdpa_bwd)
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+              causal: bool = True, kv_override=None) -> jax.Array:
+    """Self (or cross, via kv_override=(k,v)) attention over full sequences."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions, use_rope=kv_override is None)
+    if kv_override is not None:
+        k, v = kv_override
+        out = _sdpa_full(q, k, v, causal=False)
+    elif causal and S > cfg.attn_chunk and S % cfg.attn_chunk == 0:
+        out = _sdpa_blockwise(q, k, v, cfg.attn_chunk)
+    else:
+        out = _sdpa_full(q, k, v, causal=causal)
+    return out.reshape(B, S, cfg.num_heads * cfg.hd) @ p["wo"]
+
+
+def attention_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict):
+    """One-token decode: x (B,1,d); cache {'k','v': (B,Smax,KV,hd), 'idx'}."""
+    B = x.shape[0]
+    idx = cache["idx"]
+    q, k, v = _qkv(p, x, cfg, positions=jnp.full((B, 1), idx))
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, idx, 0, 0))
+    Smax = ck.shape[1]
+    valid = jnp.arange(Smax) <= idx
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    qh = q.reshape(B, KV, H // KV, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, ck).astype(jnp.float32) * hd ** -0.5
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, cv).reshape(B, 1, H * hd)
+    return out @ p["wo"], {"k": ck, "v": cv, "idx": idx + 1}
+
+
+# ------------------------------------------------------------------ mlp ----
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {"wg": Init(ks[0], (d, ff), dt), "wu": Init(ks[1], (d, ff), dt),
+            "wd": Init(ks[2], (ff, d), dt)}
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+# ----------------------------------------------------------- embeddings ----
+def init_embed(key, cfg: ModelConfig) -> dict:
+    V = cfg.padded_vocab
+    ks = jax.random.split(key, 2)
+    p = {"tok": Init(ks[0], (V, cfg.d_model), cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = Init(ks[1], (cfg.d_model, V), cfg.param_dtype)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def logits(p: dict, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if "head" not in p else p["head"]
+    return x @ w
+
+
+# --------------------------------------------------------------- losses ----
+def softmax_xent(lg: jax.Array, labels: jax.Array, z_coef: float = 1e-4):
+    """lg: (..., V) logits, labels: (...,) int; -1 is ignored.
+
+    Written as (logsumexp - one_hot.einsum) so GSPMD keeps the vocab dim
+    sharded through the reduction (no logits all-gather).
+    """
+    lg = lg.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    oh = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+    gold = jnp.einsum("...v,...v->...", lg, oh)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * mask
+    z = z_coef * (lse * mask) ** 2
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll.sum() + z.sum()) / denom

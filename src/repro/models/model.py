@@ -1,0 +1,117 @@
+"""Unified model API: build_model(cfg) -> ModelBundle.
+
+Every architecture exposes the same four entry points, which is what the
+train/serve steps, the dry-run launcher and the smoke tests consume:
+
+    init(rng)                      -> params
+    loss(params, batch)            -> scalar   (batch: tokens/labels/+extras)
+    prefill(params, batch)         -> (last_logits, cache)
+    decode(params, tokens, cache)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec
+from . import layers as L
+from . import transformer as T
+
+__all__ = ["ModelBundle", "build_model", "batch_spec"]
+
+AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable          # (params, batch, max_seq) -> cache
+
+
+def _lm_bundle(cfg: ModelConfig, remat: str) -> ModelBundle:
+    def init(rng):
+        return T.init_params(rng, cfg)
+
+    def loss(params, batch):
+        x, aux = T.forward(params, cfg, batch["tokens"],
+                           batch.get("vision_embeds"), remat=remat)
+        lg = L.logits(params["embed"], x)
+        return L.softmax_xent(lg, batch["labels"]) + AUX_COEF * aux
+
+    def prefill(params, batch):
+        # forward over the full prompt; emit last-position logits. The KV
+        # cache for subsequent decode is built by replaying into
+        # init_cache-shaped buffers (structural cost identical).
+        x, _ = T.forward(params, cfg, batch["tokens"],
+                         batch.get("vision_embeds"), remat=remat)
+        lg = L.logits(params["embed"], x[:, -1:])
+        return lg
+
+    def init_cache(params, batch_size, max_seq):
+        return T.init_cache(cfg, batch_size, max_seq)
+
+    def decode(params, tokens, cache):
+        return T.decode_step(params, cfg, tokens, cache)
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)
+
+
+def _encdec_bundle(cfg: ModelConfig, remat: str) -> ModelBundle:
+    def init(rng):
+        return encdec.init_params(rng, cfg)
+
+    def loss(params, batch):
+        mem = encdec.encode(params, cfg, batch["frames"], remat=remat)
+        x = encdec.decode_train(params, cfg, batch["tokens"], mem,
+                                remat=remat)
+        lg = L.logits(params["embed"], x)
+        return L.softmax_xent(lg, batch["labels"])
+
+    def prefill(params, batch):
+        mem = encdec.encode(params, cfg, batch["frames"], remat=remat)
+        x = encdec.decode_train(params, cfg, batch["tokens"], mem,
+                                remat=remat)
+        return L.logits(params["embed"], x[:, -1:])
+
+    def init_cache(params, batch_size, max_seq, memory=None):
+        if memory is None:
+            memory = jnp.zeros((batch_size, 128, cfg.d_model),
+                               cfg.param_dtype)
+        return encdec.init_cache(params, cfg, batch_size, max_seq, memory)
+
+    def decode(params, tokens, cache):
+        return encdec.decode_step(params, cfg, tokens, cache)
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_cache)
+
+
+def build_model(cfg: ModelConfig, remat: str = "full") -> ModelBundle:
+    if cfg.family == "encdec":
+        return _encdec_bundle(cfg, remat)
+    return _lm_bundle(cfg, remat)
+
+
+def batch_spec(cfg: ModelConfig, seq: int, batch: int, kind: str) -> dict:
+    """Abstract input structure for a (cfg, shape) cell — used by both the
+    synthetic data pipeline and the dry-run ShapeDtypeStruct specs."""
+    if cfg.family == "encdec":
+        if kind == "train" or kind == "prefill":
+            return {"frames": ((batch, seq, cfg.d_model), jnp.float32),
+                    "tokens": ((batch, seq), jnp.int32),
+                    "labels": ((batch, seq), jnp.int32)}
+        return {"tokens": ((batch, 1), jnp.int32)}
+    spec = {"tokens": ((batch, seq if kind != "decode" else 1), jnp.int32)}
+    if kind == "train":
+        spec["labels"] = ((batch, seq), jnp.int32)
+    if cfg.vision_patches and kind in ("train", "prefill"):
+        spec["vision_embeds"] = ((batch, cfg.vision_patches, cfg.d_model),
+                                 jnp.float32)
+    return spec

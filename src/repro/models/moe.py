@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FF layer (top-k routing, capacity-bounded dispatch).
+
+Dispatch strategy (DESIGN.md §4): tokens are split into routing groups of
+``group_size``; each of the k routing choices is dispatched as an
+independent top-1 one-hot einsum with per-choice capacity
+``C1 = ceil(group_size * capacity_per_choice / num_experts)``. Splitting the
+k choices keeps the dispatch tensor (G, g, E, C1) k-times smaller than the
+classic GShard combine tensor while remaining a pure einsum — the known
+GSPMD-friendly form (expert dim sharded over 'model' = EP; tokens sharded
+over 'data' = DP; the dispatch einsums lower to all-to-alls).
+
+Routing correctness (weights, renorm, capacity drops) is oracle-tested
+against a per-token python loop in tests/test_moe.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed import ctx
+from .layers import Init
+
+__all__ = ["init_moe", "moe_ff"]
+
+
+def _constrain_expert(t: jax.Array) -> jax.Array:
+    """Pin (E, G, C, ...) expert buffers: experts over 'model' (EP), groups
+    over the batch axes WHEN divisible (decode steps have G=1: constraining
+    it would force GSPMD padding/replication — §Perf hc2 decode regression).
+    No-op outside a mesh context."""
+    axes = ctx.get_batch_axes()
+    if axes is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+    gax = tuple(a for a in (axes if isinstance(axes, tuple) else (axes,))
+                if a != "model") or None
+    if isinstance(gax, tuple) and len(gax) == 1:
+        gax = gax[0]
+    n = ctx.get_data_size()
+    if gax is None or not n or t.shape[1] % n:
+        gax = None
+    return jax.lax.with_sharding_constraint(
+        t, P("model", gax, *([None] * (t.ndim - 2))))
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, E, ff = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    p = {
+        "router": Init(ks[0], (d, E), jnp.float32),
+        "ewg": Init(ks[1], (E, d, ff), dt),
+        "ewu": Init(ks[2], (E, d, ff), dt),
+        "ewd": Init(ks[3], (E, ff, d), dt),
+    }
+    if m.shared_expert:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {"wg": Init(sk[0], (d, ff), dt),
+                       "wu": Init(sk[1], (d, ff), dt),
+                       "wd": Init(sk[2], (ff, d), dt)}
+    return p
+
+
+def moe_ff(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    g = min(m.group_size, T)
+    while T % g:                      # largest divisor of T <= group_size
+        g -= 1
+    G = T // g
+    C1 = max(1, int(-(-g * m.capacity_per_choice // E)))
+
+    xt = x.reshape(G, g, d)
+    rl = (xt.astype(jnp.float32) @ p["router"])          # (G, g, E)
+    probs = jax.nn.softmax(rl, axis=-1)
+
+    # load-balance aux (Switch/GShard): E * mean_e(frac_tokens * mean_prob)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # --- build the k dispatch/combine one-hots, CONCATENATED along the
+    # capacity axis (C = k*C1): dispatch, expert FF and combine then run
+    # ONCE instead of k times, so the inherent EP all-reduces of the
+    # dispatch/combine contractions happen 1x/layer instead of k x/layer
+    # (8x link-traffic cut for top-8; EXPERIMENTS.md §Perf hc2).
+    remaining = probs
+    disp_k, comb_k = [], []
+    wsum = jnp.zeros((G, g), jnp.float32)
+    for _ in range(k):                                   # static top-k loop
+        w_j = remaining.max(axis=-1)                     # (G, g)
+        e_j = remaining.argmax(axis=-1)                  # (G, g)
+        oh_e = jax.nn.one_hot(e_j, E, dtype=jnp.float32)          # (G,g,E)
+        remaining = remaining * (1.0 - oh_e)
+        pos = jnp.cumsum(oh_e, axis=1) - 1.0                      # (G,g,E)
+        pos_tok = jnp.einsum("gte,gte->gt", pos, oh_e)            # (G,g)
+        keep = pos_tok < C1
+        oh_c = jax.nn.one_hot(pos_tok.astype(jnp.int32), C1,
+                              dtype=jnp.float32) * keep[..., None]
+        disp = jnp.einsum("gte,gtc->gtec", oh_e, oh_c).astype(x.dtype)
+        disp_k.append(disp)                              # (G,g,E,C1)
+        comb_k.append(disp * w_j[..., None, None].astype(x.dtype))
+        wsum = wsum + w_j * keep                         # dropped -> no w
+    def expert_ff(disp, comb, constrain):
+        # keep the (sharded) group dim G through the expert compute: the
+        # dispatch lowers to a token->expert all-to-all instead of the
+        # all-gather a G*C merge would force
+        xin = jnp.einsum("gtec,gtd->egcd", disp, xt)     # (E,G,C,d)
+        if constrain:
+            xin = _constrain_expert(xin)
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["ewg"]))
+        h = h * jnp.einsum("egcd,edf->egcf", xin, p["ewu"])
+        yo = jnp.einsum("egcf,efd->egcd", h, p["ewd"])   # (E,G,C,d)
+        if constrain:
+            yo = _constrain_expert(yo)
+        return jnp.einsum("gtec,egcd->gtd", comb, yo)    # (G,g,d)
+
+    if T >= 4 * m.group_size:
+        # training/prefill scale: fused dispatch — one EP all-reduce per
+        # layer instead of k (8x link cut for top-8, §Perf hc2b)
+        y = expert_ff(jnp.concatenate(disp_k, axis=-1),
+                      jnp.concatenate(comb_k, axis=-1), True)
+    else:
+        # decode/tiny-batch: k small per-choice dispatches beat one fat
+        # concat-C exchange, and forcing EP sharding on a single token
+        # group only adds resharding (measured, §Perf hc2 decode note)
+        y = sum(expert_ff(d_, c_, False) for d_, c_ in zip(disp_k, comb_k))
+    y = y / jnp.maximum(wsum[..., None], 1e-9).astype(x.dtype)
+
+    if m.shared_expert:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xt @ sp["wg"]) * (xt @ sp["wu"])) @ sp["wd"]
+    return y.reshape(B, S, d), aux

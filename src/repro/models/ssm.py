@@ -1,0 +1,167 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Recurrence (per head h, state size N, head dim P):
+    h_t = exp(a_t) * h_{t-1} + dt_t * B_t x_t^T        h_t: (N, P)
+    y_t = C_t @ h_t + D * x_t                          a_t = dt_t * A  (<0)
+
+Training uses the chunked dual form: one lax.scan over chunks of length Q;
+inside a chunk the quadratic (Q x Q) form runs on the MXU, across chunks
+only the (H, N, P) states flow — the same overlap/boundary-state trick as
+the paper's framed Viterbi decoding (DESIGN.md §5). Sub-quadratic in S, so
+this is the long_500k path. Decode carries (conv_state, ssm_state).
+
+State math in fp32; projections in cfg.dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import Init, rms_norm
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_decode", "init_mamba_state"]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.headdim
+    return s, d_in, H, s.ngroups, s.d_state
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    s, d_in, H, G, N = _dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": Init(ks[0], (cfg.d_model, 2 * d_in + 2 * G * N + H), dt),
+        "conv_w": Init(ks[1], (s.d_conv, conv_ch), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": Init(ks[3], (d_in, cfg.d_model), dt),
+    }
+
+
+def _split_proj(proj, cfg):
+    s, d_in, H, G, N = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width K: (B,S,C) -> (B,S,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _split_xbc(xBC, cfg):
+    s, d_in, H, G, N = _dims(cfg)
+    x, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    B_, S_ = x.shape[0], x.shape[1]
+    x = x.reshape(B_, S_, H, s.headdim)
+    Bm = Bm.reshape(B_, S_, G, N)
+    Cm = Cm.reshape(B_, S_, G, N)
+    # broadcast groups to heads
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    return x, Bm, Cm
+
+
+def mamba_forward(p: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill forward: u (B, S, d_model) -> (B, S, d_model)."""
+    s, d_in, H, G, N = _dims(cfg)
+    B, S0, _ = u.shape
+    Q = min(s.chunk, S0)
+    if S0 % Q:                        # causal ⇒ tail padding is harmless
+        u = jnp.pad(u, ((0, 0), (0, Q - S0 % Q), (0, 0)))
+    S = u.shape[1]
+    nc = S // Q
+
+    proj = u @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = _split_xbc(xBC, cfg)                    # (B,S,H,P),(B,S,H,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                            # (H,) negative
+    a = dt * A                                          # (B,S,H) log-decay
+
+    # chunked SSD: scan over chunks, carry state (B,H,N,P) -----------------
+    P = s.headdim
+    xc = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    ac = a.reshape(B, nc, Q, H)
+    dtc = dt.reshape(B, nc, Q, H)
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+
+    def chunk_step(state, inp):                         # state: (B,H,N,P)
+        xq, bq, cq, aq, dq = inp                        # (B,Q,...)
+        cs = jnp.cumsum(aq, axis=1)                     # (B,Q,H) inclusive
+        # intra-chunk (quadratic, MXU): decay(j->i) = exp(cs_i - cs_j), i>=j
+        dec = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])      # (B,Q,Q,H)
+        dec = dec * tri[None, :, :, None]
+        cb = jnp.einsum("bihn,bjhn->bijh", cq, bq)
+        scores = cb * dec * dq[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xq)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("bihn,bhnp->bihp", cq * jnp.exp(cs)[..., None],
+                           state)
+        # state update: S' = exp(cs_last) S + sum_j exp(cs_last - cs_j) dt_j B_j x_j
+        w = jnp.exp(cs[:, -1:, :] - cs) * dq            # (B,Q,H)
+        ns = jnp.einsum("bjhn,bjhp->bhnp", bq * w[..., None], xq)
+        state = state * jnp.exp(cs[:, -1])[:, :, None, None] + ns
+        return state, y
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, Bc, Cc, ac, dtc))
+    _, ys = jax.lax.scan(chunk_step, state0, inputs)    # (nc,B,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, :S0]
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s, d_in, H, G, N = _dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), cfg.param_dtype),
+        "ssm": jnp.zeros((batch, H, N, s.headdim), dtype),
+    }
+
+
+def mamba_decode(p: dict, u: jax.Array, cfg: ModelConfig, state: dict):
+    """One-token decode: u (B, 1, d_model); O(1) state, no KV growth."""
+    s, d_in, H, G, N = _dims(cfg)
+    B = u.shape[0]
+    proj = u @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, cfg)             # (B,1,*)
+    # conv over (cached d_conv-1 inputs | current)
+    hist = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)],
+                           axis=1)                      # (B,K,C)
+    w, b = p["conv_w"], p["conv_b"]
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + b)[:, None, :]
+    x, Bm, Cm = _split_xbc(conv, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                 # (B,H)
+    xs = x[:, 0].astype(jnp.float32)                    # (B,H,P)
+    Bs = Bm[:, 0].astype(jnp.float32)                   # (B,H,N)
+    Cs = Cm[:, 0].astype(jnp.float32)
+    ssm = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bs * dt[..., None], xs)
+    y = jnp.einsum("bhn,bhnp->bhp", Cs, ssm) + xs * p["D"][:, None]
+    y = y.reshape(B, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    new_state = {"conv": hist[:, 1:], "ssm": ssm}
+    return y @ p["out_proj"], new_state

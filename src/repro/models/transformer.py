@@ -1,0 +1,176 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid / VLM.
+
+Scan-over-layers with **superblocks**: the layer pattern (attention-vs-mamba
+x dense-vs-MoE) repeats with period SB = lcm(|block_pattern|, moe.period);
+layers are stacked as (R = num_layers/SB) repeats and applied with one
+lax.scan. HLO size is therefore independent of depth (a 94-layer qwen3-moe
+traces one superblock), which keeps the 512-device dry-run compiles fast and
+is the remat unit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .moe import init_moe, moe_ff
+from .ssm import init_mamba, init_mamba_state, mamba_decode, mamba_forward
+from ..distributed.ctx import constrain_batch
+
+__all__ = ["superblock_kinds", "init_params", "forward", "init_cache",
+           "decode_step"]
+
+
+def superblock_kinds(cfg: ModelConfig) -> list:
+    """[(mixer 'A'|'M', ff 'dense'|'moe'|None), ...] for one superblock."""
+    pat = cfg.pattern
+    period = cfg.moe.period if cfg.moe else 1
+    sb = math.lcm(len(cfg.block_pattern), period)
+    assert cfg.num_layers % sb == 0, (cfg.num_layers, sb)
+    kinds = []
+    for i in range(sb):
+        if cfg.d_ff == 0 and not cfg.moe_at(i):
+            ff = None
+        else:
+            ff = "moe" if cfg.moe_at(i) else "dense"
+        kinds.append((pat[i], ff))
+    return kinds
+
+
+def _init_block(key, cfg: ModelConfig, kind) -> dict:
+    mixer, ff = kind
+    ks = jax.random.split(key, 2)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    p["mixer"] = (L.init_attention(ks[0], cfg) if mixer == "A"
+                  else init_mamba(ks[0], cfg))
+    if ff is not None:
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ff"] = init_moe(ks[1], cfg) if ff == "moe" else L.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    kinds = superblock_kinds(cfg)
+    R = cfg.num_layers // len(kinds)
+    ke, kb = jax.random.split(key)
+
+    def init_sb(k):
+        ks = jax.random.split(k, len(kinds))
+        return {f"b{i}": _init_block(ks[i], cfg, kind)
+                for i, kind in enumerate(kinds)}
+
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "blocks": jax.vmap(init_sb)(jax.random.split(kb, R)),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind,
+                 positions: jax.Array):
+    mixer, ff = kind
+    aux = jnp.float32(0)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "A":
+        x = x + L.attention(p["mixer"], h, cfg, positions)
+    else:
+        x = x + mamba_forward(p["mixer"], h, cfg)
+    if ff is not None:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ff == "moe":
+            y, aux = moe_ff(p["ff"], h, cfg)
+            x = x + y
+        else:
+            x = x + L.mlp(p["ff"], h)
+    return x, aux
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            vision_embeds: Optional[jax.Array] = None,
+            remat: str = "full"):
+    """tokens (B, S) -> (hidden (B, S, d), moe_aux). Train/prefill path."""
+    kinds = superblock_kinds(cfg)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if cfg.vision_patches and vision_embeds is not None:
+        # early fusion: the first vision_patches positions are patch embeds
+        Pv = cfg.vision_patches
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, Pv:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def sb_body(x, sbp):
+        x = constrain_batch(x)
+        aux = jnp.float32(0)
+        for i, kind in enumerate(kinds):
+            x, a = _apply_block(sbp[f"b{i}"], x, cfg, kind, positions)
+            aux = aux + a
+        return x, aux
+
+    if remat == "full":
+        sb_body = jax.checkpoint(sb_body)
+    elif remat == "dots":
+        sb_body = jax.checkpoint(
+            sb_body, policy=jax.checkpoint_policies.checkpoint_dots)
+    x, auxs = jax.lax.scan(sb_body, x, params["blocks"])
+    x = constrain_batch(L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+    return x, jnp.sum(auxs)
+
+
+# ------------------------------------------------------------- decoding ----
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Stacked per-superblock-position caches, leading dim = repeats."""
+    kinds = superblock_kinds(cfg)
+    R = cfg.num_layers // len(kinds)
+    KV, hd = cfg.num_kv_heads, cfg.hd
+
+    def one(kind):
+        mixer, _ = kind
+        if mixer == "A":
+            shape = (R, batch, max_seq, KV, hd)
+            return {"k": jnp.zeros(shape, cfg.param_dtype),
+                    "v": jnp.zeros(shape, cfg.param_dtype),
+                    "idx": jnp.zeros((R,), jnp.int32)}
+        st = jax.vmap(lambda _: init_mamba_state(cfg, batch))(jnp.arange(R))
+        return st
+
+    return {f"b{i}": one(kind) for i, kind in enumerate(kinds)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict):
+    """One-token decode: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    kinds = superblock_kinds(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    def sb_body(x, inp):
+        sbp, sbc = inp
+        newc = {}
+        for i, (mixer, ff) in enumerate(kinds):
+            p = sbp[f"b{i}"]
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            if mixer == "A":
+                y, newc[f"b{i}"] = L.attention_decode(p["mixer"], h, cfg,
+                                                      sbc[f"b{i}"])
+            else:
+                y, newc[f"b{i}"] = mamba_decode(p["mixer"], h, cfg,
+                                                sbc[f"b{i}"])
+            x = x + y
+            if ff is not None:
+                h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+                if ff == "moe":
+                    y, _ = moe_ff(p["ff"], h, cfg)
+                    x = x + y
+                else:
+                    x = x + L.mlp(p["ff"], h)
+        return x, newc
+
+    # scan over repeats; cache leaves all have leading dim R and the new
+    # cache is emitted as the scan output (one slice per repeat)
+    x, newcache = jax.lax.scan(sb_body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    lg = L.logits(params["embed"], x)
+    return lg, newcache

@@ -1,0 +1,64 @@
+"""AdamW from scratch (no optax in this environment).
+
+bf16 params + fp32 moments (DESIGN.md §4); global-norm clipping; decoupled
+weight decay (skipped for 1-D leaves: norms/biases). Functional init/update
+pair; moments inherit the param sharding (the launch layer may additionally
+shard them over the 'pod' axis — ZeRO-style — see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "adamw"]
+
+
+class AdamW(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0) -> AdamW:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if p.ndim >= 2:                      # decoupled WD, matrices only
+                u = u + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * u
+            return newp.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        return newp, {"m": newm, "v": newv, "step": step}, {
+            "grad_norm": gnorm, "lr": lr_t}
+
+    return AdamW(init, update)

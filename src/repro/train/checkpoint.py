@@ -1,0 +1,124 @@
+"""Sharded, atomic, mesh-agnostic checkpointing (no orbax available — built
+from scratch).
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json. Writes go to a tmp dir
+that is os.replace()'d into place, so a crash mid-save can never corrupt
+the latest checkpoint (fault tolerance invariant #1). Arrays are stored as
+host numpy keyed by their tree path, which makes checkpoints MESH-AGNOSTIC:
+restore() device_puts onto whatever shardings the (possibly different-sized,
+i.e. elastic) target mesh provides. Async saves run on a daemon thread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V":      # ml_dtypes (bf16 etc.): widen for npz
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten(tree_like, flat: dict):
+    def fetch(path, leaf):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = flat[key]
+        return arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+    return jax.tree_util.tree_map_with_path(fetch, tree_like)
+
+
+def save(ckpt_dir: str, step: int, state: Any, meta: Optional[dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(state))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "complete": True, **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(_all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _all_steps(ckpt_dir: str):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            man = os.path.join(ckpt_dir, name, "manifest.json")
+            try:
+                with open(man) as f:
+                    if json.load(f).get("complete"):
+                        out.append(int(name[5:]))
+            except (OSError, ValueError):
+                continue                        # torn checkpoint: ignored
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, state_like: Any,
+            shardings: Any = None) -> Any:
+    """Load a checkpoint onto ``shardings`` (any mesh — elastic restore)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    state = _unflatten(state_like, flat)
+    if shardings is not None:
+        state = jax.tree.map(jax.device_put, state, shardings)
+    return state
+
+
+class Checkpointer:
+    """Async wrapper: save() returns immediately; wait() joins the writer."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir, self.keep = ckpt_dir, keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save_async(self, step: int, state: Any, meta: Optional[dict] = None):
+        state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save, args=(self.dir, step, state, meta, self.keep),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

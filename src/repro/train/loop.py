@@ -1,0 +1,110 @@
+"""Restart-safe training loop with straggler watchdog and failure recovery.
+
+At 1000+ node scale the failure model is: (a) hosts die mid-step, (b) steps
+straggle (slow HBM, thermal throttle, network), (c) preemption. The loop
+implements the corresponding mitigations at the framework level:
+
+  (a) per-step exception recovery: restore from the last complete
+      checkpoint and continue (the synthetic pipeline is a pure function of
+      the step index, so the data stream replays exactly);
+  (b) an EMA watchdog flags steps slower than ``straggler_factor`` x EMA and
+      invokes ``on_straggler`` (at scale: evict/re-shard; here: counted and
+      logged — the policy hook is the deliverable);
+  (c) atomic checkpoints every ``ckpt_every`` steps + resume-from-latest.
+
+Elasticity: ``elastic_rescale`` re-lowers the step for a new mesh and
+re-device_puts the (mesh-agnostic) checkpoint onto it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from . import checkpoint as ckpt
+
+__all__ = ["LoopConfig", "train_loop", "StepStats"]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    ema_decay: float = 0.9
+    max_restores: int = 3
+
+
+@dataclasses.dataclass
+class StepStats:
+    steps_run: int = 0
+    restores: int = 0
+    stragglers: int = 0
+    last_loss: float = float("nan")
+
+
+def train_loop(step_fn: Callable, state: dict, data_iter, lc: LoopConfig,
+               fail_injector: Optional[Callable[[int], None]] = None,
+               on_straggler: Optional[Callable[[int, float], None]] = None,
+               log_every: int = 10) -> StepStats:
+    """state = {'params':..., 'opt':...}; step_fn(params, opt, batch) ->
+    (params, opt, metrics). Returns aggregate stats (used by tests)."""
+    stats = StepStats()
+    start = 0
+    latest = ckpt.latest_step(lc.ckpt_dir)
+    if latest is not None:
+        state = ckpt.restore(lc.ckpt_dir, latest, state)
+        start = latest + 1
+    data_iter.step = start
+
+    ema = None
+    step = start
+    while step < lc.total_steps:
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        try:
+            if fail_injector is not None:
+                fail_injector(step)
+            params, opt, metrics = step_fn(state["params"], state["opt"],
+                                           batch)
+            metrics = jax.device_get(metrics)
+            state = {"params": params, "opt": opt}
+        except Exception:  # noqa: BLE001 — node failure simulation
+            stats.restores += 1
+            if stats.restores > lc.max_restores:
+                raise
+            latest = ckpt.latest_step(lc.ckpt_dir)
+            if latest is not None:
+                state = ckpt.restore(lc.ckpt_dir, latest, state)
+                step = latest + 1
+            else:
+                step = 0
+            data_iter.step = step
+            continue
+        dt = time.perf_counter() - t0
+        if ema is not None and dt > lc.straggler_factor * ema:
+            stats.stragglers += 1
+            if on_straggler is not None:
+                on_straggler(step, dt / ema)
+        ema = dt if ema is None else lc.ema_decay * ema + (1 - lc.ema_decay) * dt
+        stats.last_loss = float(metrics["loss"])
+        stats.steps_run += 1
+        if (step + 1) % lc.ckpt_every == 0 or step + 1 == lc.total_steps:
+            ckpt.save(lc.ckpt_dir, step, state, keep=lc.keep)
+        step += 1
+    return stats
+
+
+def elastic_rescale(state: dict, new_mesh, sharding_fn):
+    """Re-place a (host-side) training state onto a different mesh.
+
+    sharding_fn(mesh, state) -> tree of NamedSharding. Works because
+    checkpoints/state are mesh-agnostic host arrays (checkpoint.py).
+    """
+    shardings = sharding_fn(new_mesh, state)
+    host = jax.tree.map(lambda x: jax.device_get(x), state)
+    return jax.tree.map(jax.device_put, host, shardings)

@@ -1,0 +1,62 @@
+"""Train / prefill / decode step builders (mesh-agnostic; the launch layer
+applies in/out shardings via jax.jit)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import ModelBundle
+from ..optim.adamw import AdamW
+
+__all__ = ["make_train_step", "make_accum_train_step", "make_prefill_step",
+           "make_decode_step"]
+
+
+def make_train_step(bundle: ModelBundle, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_accum_train_step(bundle: ModelBundle, opt: AdamW, accum: int):
+    """Gradient accumulation over ``accum`` microbatches (leading dim).
+
+    The grads stay as unreduced partial sums through the scan and the DP
+    mean happens once at the end — GSPMD therefore schedules one bucketed
+    all-reduce that overlaps the next microbatch's backward (compute/comm
+    overlap without manual double buffering).
+    """
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(bundle.loss)(params, mb)
+            gsum = jax.tree.map(jnp.add, gsum,
+                                jax.tree.map(lambda g: g.astype(jnp.float32),
+                                             grads))
+            return (gsum, lsum + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.float32(0)), batch)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": lsum / accum, **metrics}
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle):
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle):
+    def decode_step(params, tokens, cache):
+        logits, cache = bundle.decode(params, tokens, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+    return decode_step

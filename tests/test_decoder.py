@@ -1,0 +1,65 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FrameSpec, STD_K7, encode, framed_decode,
+                        viterbi_decode)
+from repro.core.encoder import encode_bits
+from repro.core.trellis import make_trellis
+
+from conftest import noisy_llr
+
+
+def test_encoder_matches_numpy_oracle(rng):
+    bits = rng.integers(0, 2, 500)
+    a = np.asarray(encode(jnp.asarray(bits), STD_K7))
+    b = encode_bits(bits, STD_K7)
+    assert np.array_equal(a, b)
+
+
+def test_noiseless_roundtrip(rng):
+    bits = rng.integers(0, 2, 400)
+    coded = np.asarray(encode(jnp.asarray(bits), STD_K7))
+    llr = 1.0 - 2.0 * coded.astype(np.float32)
+    out = np.asarray(viterbi_decode(jnp.asarray(llr), STD_K7))
+    assert np.array_equal(out, bits)
+
+
+def test_hard_decision_with_errors(rng):
+    """Flip a few coded bits: ML decoding must still recover (t < dfree/2)."""
+    bits = rng.integers(0, 2, 300)
+    coded = np.asarray(encode(jnp.asarray(bits), STD_K7)).copy()
+    flat = coded.reshape(-1)
+    flat[[50, 200, 400]] ^= 1          # 3 isolated errors, dfree=10
+    llr = 1.0 - 2.0 * coded.astype(np.float32)
+    out = np.asarray(viterbi_decode(jnp.asarray(llr), STD_K7))
+    assert np.array_equal(out, bits)
+
+
+@pytest.mark.parametrize("f,v1,v2", [(64, 20, 20), (128, 32, 32),
+                                     (256, 20, 24)])
+def test_framed_equals_full_noiseless(rng, f, v1, v2):
+    bits = rng.integers(0, 2, 1000)
+    coded = np.asarray(encode(jnp.asarray(bits), STD_K7))
+    llr = jnp.asarray(1.0 - 2.0 * coded.astype(np.float32))
+    out = np.asarray(framed_decode(llr, STD_K7, FrameSpec(f=f, v1=v1, v2=v2)))
+    assert np.array_equal(out, bits)
+
+
+def test_framed_noisy_close_to_full(rng):
+    bits = rng.integers(0, 2, 20000)
+    llr = jnp.asarray(noisy_llr(bits, STD_K7, 3.0, rng))
+    full = np.asarray(viterbi_decode(llr, STD_K7))
+    framed = np.asarray(framed_decode(llr, STD_K7, FrameSpec(256, 20, 20)))
+    ber_full = (full != bits).mean()
+    ber_framed = (framed != bits).mean()
+    assert ber_framed <= ber_full + 5e-4   # paper: v2=20 reaches theory
+
+
+def test_other_code_k5(rng):
+    tr = make_trellis(5, (0o23, 0o35))
+    bits = rng.integers(0, 2, 300)
+    coded = np.asarray(encode(jnp.asarray(bits), tr))
+    llr = jnp.asarray(1.0 - 2.0 * coded.astype(np.float32))
+    out = np.asarray(viterbi_decode(llr, tr))
+    assert np.array_equal(out, bits)

@@ -1,0 +1,98 @@
+"""Per-kernel correctness sweeps: shapes x dtypes x codes vs the pure-jnp
+oracle (ref.py), in interpret mode (CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FrameSpec, STD_K7, encode
+from repro.core.framed import frame_llr
+from repro.core.trellis import make_trellis
+from repro.kernels import ops, ref
+
+from conftest import noisy_llr
+
+
+def _frames(bits, trellis, spec, rng, snr=3.0, dtype=np.float32):
+    llr = noisy_llr(bits, trellis, snr, rng).astype(dtype)
+    return frame_llr(jnp.asarray(llr), spec)
+
+
+@pytest.mark.parametrize("spec", [
+    FrameSpec(f=64, v1=20, v2=20),                      # serial tb
+    FrameSpec(f=64, v1=20, v2=20, f0=16, v2s=20),       # parallel tb
+    FrameSpec(f=64, v1=20, v2=20, f0=8, v2s=16),
+    FrameSpec(f=128, v1=0, v2=32, f0=32, v2s=32),       # no left overlap
+    FrameSpec(f=96, v1=12, v2=24, f0=24, v2s=20, start="fixed"),
+])
+def test_unified_kernel_matches_ref(rng, spec):
+    bits = rng.integers(0, 2, 1000)
+    frames = _frames(bits, STD_K7, spec, rng)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(frames, STD_K7, spec,
+                                               unified=True))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("spec", [
+    FrameSpec(f=64, v1=20, v2=20),
+    FrameSpec(f=64, v1=20, v2=20, f0=16, v2s=20),
+])
+def test_split_kernel_matches_ref(rng, spec):
+    bits = rng.integers(0, 2, 600)
+    frames = _frames(bits, STD_K7, spec, rng)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(frames, STD_K7, spec,
+                                               unified=False))
+    assert np.array_equal(got, want)
+
+
+def test_forward_kernel_matches_ref(rng):
+    bits = rng.integers(0, 2, 500)
+    spec = FrameSpec(f=64, v1=16, v2=16)
+    frames = _frames(bits, STD_K7, spec, rng)
+    from repro.kernels.viterbi_fwd import forward_frames
+    F = frames.shape[0]
+    Fp = -(-F // 8) * 8
+    padded = jnp.pad(frames, ((0, Fp - F), (0, 0), (0, 0)))
+    sel, amax = forward_frames(padded, trellis=STD_K7)
+    sel_w, amax_w = ref.forward_frames_ref(padded, STD_K7)
+    assert np.array_equal(np.asarray(sel), np.asarray(sel_w))
+    assert np.array_equal(np.asarray(amax), np.asarray(amax_w))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernel_dtypes(rng, dtype):
+    bits = rng.integers(0, 2, 400)
+    spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    llr = noisy_llr(bits, STD_K7, 4.0, rng)
+    frames = frame_llr(jnp.asarray(llr, dtype=dtype), spec)
+    want = np.asarray(ref.unified_decode_frames_ref(
+        frames.astype(jnp.float32), STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(frames, STD_K7, spec))
+    # bf16 quantizes the LLRs before the kernel casts up: identical inputs
+    # to both paths, so outputs must match exactly
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("k,polys", [(5, (0o23, 0o35)),
+                                     (7, (0o171, 0o133)),
+                                     (4, (0o13, 0o15, 0o17))])  # beta=3
+def test_kernel_other_codes(rng, k, polys):
+    tr = make_trellis(k, polys)
+    bits = rng.integers(0, 2, 400)
+    spec = FrameSpec(f=64, v1=16, v2=16, f0=16, v2s=16)
+    frames = _frames(bits, tr, spec, rng, snr=6.0)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, tr, spec))
+    got = np.asarray(ops.viterbi_decode_frames(frames, tr, spec))
+    assert np.array_equal(got, want)
+
+
+def test_kernel_frame_padding(rng):
+    """Frame counts not divisible by the tile size are padded + unpadded."""
+    bits = rng.integers(0, 2, 64 * 5)                  # 5 frames, tile=8
+    spec = FrameSpec(f=64, v1=16, v2=16)
+    frames = _frames(bits, STD_K7, spec, rng)
+    assert frames.shape[0] == 5
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(frames, STD_K7, spec))
+    assert got.shape == want.shape and np.array_equal(got, want)

@@ -1,0 +1,53 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, constant, warmup_cosine
+
+
+def test_adamw_matches_manual_reference():
+    opt = adamw(constant(0.1), b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0, clip_norm=1e9)
+    p = {"w": jnp.array([[1.0, 2.0]], jnp.float32)}
+    g = {"w": jnp.array([[0.5, -0.25]], jnp.float32)}
+    s = opt.init(p)
+    p1, s1, _ = opt.update(g, s, p)
+    # manual adam step 1: m=0.1g, v=0.001g^2; mhat=g, vhat=g^2
+    # update = g/(|g|+eps) = sign(g) -> p - 0.1*sign(g)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               [[1.0 - 0.1, 2.0 + 0.1]], rtol=1e-5)
+
+
+def test_weight_decay_only_on_matrices():
+    opt = adamw(constant(0.1), weight_decay=0.1)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    p1, _, _ = opt.update(g, opt.init(p), p)
+    assert np.all(np.asarray(p1["w"]) < 1.0)      # decayed
+    np.testing.assert_array_equal(np.asarray(p1["b"]), 1.0)   # not decayed
+
+
+def test_clipping():
+    opt = adamw(constant(0.1), clip_norm=1.0)
+    p = {"w": jnp.zeros((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, met = opt.update(g, opt.init(p), p)
+    assert float(met["grad_norm"]) == 200.0       # reported pre-clip
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, warmup=10, total=110, floor=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(60))) < 1.0
+    assert abs(float(lr(jnp.int32(110))) - 0.1) < 1e-6
+
+
+def test_bf16_params_fp32_moments():
+    opt = adamw(constant(1e-2))
+    p = {"w": jnp.ones((3, 3), jnp.bfloat16)}
+    s = opt.init(p)
+    assert s["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((3, 3), jnp.bfloat16)}
+    p1, s1, _ = opt.update(g, s, p)
+    assert p1["w"].dtype == jnp.bfloat16

@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FrameSpec, STD_K7, encode, framed_decode,
+                        viterbi_decode)
+from repro.core.trellis import make_trellis
+from repro.core.puncture import PATTERNS, depuncture, puncture
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(50, 400))
+def test_decode_encode_roundtrip_noiseless(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n)
+    coded = np.asarray(encode(jnp.asarray(bits), STD_K7))
+    llr = jnp.asarray(1.0 - 2.0 * coded.astype(np.float32))
+    out = np.asarray(viterbi_decode(llr, STD_K7))
+    assert np.array_equal(out, bits)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(4, 8))
+def test_random_codes_roundtrip(seed, k):
+    rng = np.random.default_rng(seed)
+    # random polynomials with the MSB set (delay-0 tap present)
+    polys = tuple(int(rng.integers(1 << (k - 1), 1 << k)) for _ in range(2))
+    tr = make_trellis(k, polys)
+    bits = rng.integers(0, 2, 200)
+    coded = np.asarray(encode(jnp.asarray(bits), tr))
+    llr = jnp.asarray(1.0 - 2.0 * coded.astype(np.float32))
+    out = np.asarray(viterbi_decode(llr, tr))
+    # catastrophic codes exist among random polys; require <2% disagreement
+    # only when the code is non-catastrophic (gcd of polys == 1 heuristic):
+    import math
+    if math.gcd(polys[0], polys[1]) == 1:
+        assert np.array_equal(out, bits)
+
+
+@given(st.integers(0, 2**32 - 1),
+       st.sampled_from(["1/2", "2/3", "3/4"]), st.integers(24, 120))
+def test_puncture_inverse_property(seed, rate, n):
+    rng = np.random.default_rng(seed)
+    period = PATTERNS[rate].shape[1]
+    n = (n // period) * period
+    x = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    y = np.asarray(depuncture(puncture(x, rate), rate, n))
+    mask = np.tile(PATTERNS[rate], (1, n)).T[:n].astype(bool)
+    assert np.array_equal(y[mask], np.asarray(x)[mask])
+    assert np.all(y[~mask] == 0)
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_framed_decode_permutation_invariance(seed):
+    """Decoding is per-frame independent: decoding a stream whose frames are
+    decoded jointly equals the full framed decode (vmap correctness)."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, 512)
+    coded = np.asarray(encode(jnp.asarray(bits), STD_K7))
+    llr = 1 - 2 * coded.astype(np.float32)
+    llr += 0.3 * rng.standard_normal(llr.shape).astype(np.float32)
+    spec = FrameSpec(f=128, v1=16, v2=20)
+    full = np.asarray(framed_decode(jnp.asarray(llr), STD_K7, spec))
+    # decode the two halves separately at a frame boundary
+    a = np.asarray(framed_decode(jnp.asarray(llr[:256 + spec.v2]),
+                                 STD_K7, spec, n_out=256))[:256]
+    assert np.array_equal(full[:256 - spec.v2], a[:256 - spec.v2])
+
+
+@given(st.integers(0, 2**32 - 1),
+       st.integers(1, 4), st.integers(1, 3), st.integers(1, 3))
+def test_rms_norm_custom_vjp_matches_autodiff(seed, b, s, dmul):
+    from repro.models.layers import rms_norm
+    d = 8 * dmul
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (b, s, d), jnp.float32)
+    w = 1.0 + 0.1 * jax.random.normal(k2, (d,), jnp.float32)
+    dy = jax.random.normal(k3, (b, s, d), jnp.float32)
+
+    def ref(x, w):
+        xf = x.astype(jnp.float32)
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-5)
+        return (y * w).astype(x.dtype)
+
+    y1, vjp1 = jax.vjp(lambda x, w: rms_norm(x, w, 1e-5), x, w)
+    y2, vjp2 = jax.vjp(ref, x, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    g1, g2 = vjp1(dy), vjp2(dy)
+    np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]),
+                               atol=1e-4)
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([32, 64]),
+       st.integers(1, 2))
+def test_blockwise_attention_matches_full(seed, chunk, gmul):
+    from repro.models.layers import _sdpa_blockwise, _sdpa_full
+    B, S, KV, hd = 2, 128, 2, 16
+    H = KV * gmul
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    full = _sdpa_full(q, k, v, causal=True)
+    bw = _sdpa_blockwise(q, k, v, chunk)
+    np.testing.assert_allclose(np.asarray(bw), np.asarray(full), atol=2e-5)

@@ -1,0 +1,46 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import STD_K7, encode
+from repro.core.pipeline import DecoderConfig, make_decoder
+from repro.core.framed import FrameSpec
+from repro.core.puncture import (PATTERNS, check_alignment, depuncture,
+                                 puncture, punctured_rate)
+
+
+def test_rates():
+    assert punctured_rate("1/2") == 0.5
+    assert punctured_rate("2/3") == pytest.approx(2 / 3)
+    assert punctured_rate("3/4") == pytest.approx(3 / 4)
+
+
+def test_puncture_depuncture_inverse(rng):
+    n = 96
+    x = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    for rate in ("1/2", "2/3", "3/4"):
+        s = puncture(x, rate)
+        y = np.asarray(depuncture(s, rate, n))
+        mask = np.tile(PATTERNS[rate], (1, n)).T[:n].astype(bool)
+        assert np.array_equal(y[mask], np.asarray(x)[mask])
+        assert np.all(y[~mask] == 0)          # erased -> neutral zero
+
+def test_alignment_check():
+    check_alignment(252, 21, 21, "3/4")
+    with pytest.raises(ValueError):
+        check_alignment(256, 20, 20, "3/4")
+
+
+@pytest.mark.parametrize("rate,f,v,snr", [("2/3", 256, 20, 5.0),
+                                          ("3/4", 252, 21, 6.0)])
+def test_punctured_decode_end_to_end(rng, rate, f, v, snr):
+    n = 30000
+    bits = rng.integers(0, 2, n)
+    coded = np.asarray(encode(jnp.asarray(bits), STD_K7))
+    tx = 1.0 - 2.0 * np.asarray(puncture(jnp.asarray(coded), rate))
+    sigma = 10.0 ** (-snr / 20.0)
+    rx = tx + sigma * rng.standard_normal(tx.shape).astype(np.float32)
+    dec = make_decoder(DecoderConfig(spec=FrameSpec(f, v, v), rate=rate))
+    out = np.asarray(dec(jnp.asarray(rx), n))
+    ber = (out != bits).mean()
+    assert ber < 5e-2, ber                     # decodes well above chance

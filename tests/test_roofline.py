@@ -1,0 +1,80 @@
+"""Calibration tests for the HLO cost model — these pin the semantics the
+roofline relies on (per-device numbers; scan bodies multiplied by trip
+count; collective byte attribution)."""
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import module_cost, _shape_bytes
+from repro.launch.roofline import collective_bytes
+
+CALIB = r"""
+import os
+os.environ["XLA_FLAGS"]="--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+import sys
+sys.path.insert(0, "src")
+from repro.launch.hlo_cost import module_cost
+
+mesh = jax.make_mesh((2,4), ("data","model"))
+B, D = 64, 512
+x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+w3 = jax.ShapeDtypeStruct((3, D, D), jnp.float32)
+xs = NamedSharding(mesh, P("data", None))
+ws = NamedSharding(mesh, P(None, None, "model"))
+
+def f(x, w): return jnp.sum((x @ w[0])**2)
+c = jax.jit(f, in_shardings=(xs, ws)).lower(x, w3).compile()
+c1 = module_cost(c.as_text())
+assert abs(c1.flops - 2*B*D*D/8) < 0.01*2*B*D*D/8, c1.flops
+xla = float((c.cost_analysis() or {}).get("flops", 0))
+assert abs(xla - 2*B*D*D/8) < 0.01*2*B*D*D/8, xla  # per-device semantics
+
+def g(x, w):
+    def body(h, wi): return jnp.tanh(h @ wi), ()
+    h, _ = jax.lax.scan(body, x, w)
+    return jnp.sum(h)
+c2 = jax.jit(g, in_shardings=(xs, ws)).lower(x, w3).compile()
+cc = module_cost(c2.as_text())
+want = 3*2*(B//2)*D*(D//4)
+assert abs(cc.flops - want) < 0.01*want, (cc.flops, want)
+# XLA counts the body ONCE (the reason hlo_cost exists):
+xla2 = float((c2.cost_analysis() or {}).get("flops", 0))
+assert xla2 < 0.5 * want, (xla2, want)
+# the all-gather inside the loop is counted x3
+ag = cc.coll_raw["all-gather"]
+assert abs(ag - 3*(B//2)*D*4) < 1, ag
+print("CALIB_OK")
+"""
+
+
+def test_cost_model_calibration_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", CALIB], capture_output=True,
+                       text=True, timeout=300, env=env,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "CALIB_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[2,3,4]{2,1,0}") == 48
+    assert _shape_bytes("(f32[8], s8[16])") == 48
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_collective_text_parser():
+    hlo = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %ag = f32[64,32]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
+  %ar = bf16[128]{0} all-reduce-start(%y), channel_id=3
+  %done = bf16[128]{0} all-reduce-done(%ar)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 64 * 32 * 4
+    assert out["all-reduce"] == 256

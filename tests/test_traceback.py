@@ -1,0 +1,46 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FrameSpec, STD_K7, framed_decode
+from conftest import noisy_llr
+
+
+def _ber(spec, bits, llr):
+    out = np.asarray(framed_decode(jnp.asarray(llr), STD_K7, spec))
+    return (out != bits).mean()
+
+
+def test_parallel_equals_serial_noiseless(rng):
+    bits = rng.integers(0, 2, 2048)
+    llr = noisy_llr(bits, STD_K7, 60.0, rng)       # ~noiseless
+    serial = _ber(FrameSpec(128, 20, 45), bits, llr)
+    par = _ber(FrameSpec(128, 20, 45, f0=32, v2s=45), bits, llr)
+    assert serial == 0 and par == 0
+
+
+def test_boundary_start_beats_fixed(rng):
+    """Paper Fig. 11: random/fixed traceback start hurts BER; storing the
+    per-stage argmax state recovers it."""
+    bits = rng.integers(0, 2, 60000)
+    llr = noisy_llr(bits, STD_K7, 2.0, rng)
+    b = _ber(FrameSpec(256, 20, 45, f0=32, v2s=45, start="boundary"),
+             bits, llr)
+    f = _ber(FrameSpec(256, 20, 45, f0=32, v2s=20, start="fixed"), bits, llr)
+    assert b < f
+
+
+def test_larger_v2s_improves_parallel_tb(rng):
+    """Paper Table III: v2 (subframe overlap) dominates parallel-TB BER."""
+    bits = rng.integers(0, 2, 60000)
+    llr = noisy_llr(bits, STD_K7, 2.0, rng)
+    b_small = _ber(FrameSpec(256, 20, 45, f0=32, v2s=10), bits, llr)
+    b_large = _ber(FrameSpec(256, 20, 45, f0=32, v2s=45), bits, llr)
+    assert b_large <= b_small
+
+
+def test_parallel_tb_validation():
+    with pytest.raises(AssertionError):
+        FrameSpec(128, 20, 20, f0=24, v2s=20).validate()   # 128 % 24 != 0
+    with pytest.raises(AssertionError):
+        FrameSpec(128, 20, 20, f0=32, v2s=30).validate()   # v2s > v2

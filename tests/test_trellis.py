@@ -1,0 +1,53 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trellis import make_trellis, popcount, STD_K7
+
+
+def test_std_k7_tables():
+    tr = STD_K7
+    assert tr.num_states == 64 and tr.beta == 2
+    assert tr.polys == (0o171, 0o133)
+    # Fig 1a: from state 0, input 1 -> both output bits are 1 (all taps see 1)
+    assert tr.out_bits[0, 0] == 0
+    assert tr.out_bits[0, 1] == 0b11
+
+
+def test_butterfly_consistency():
+    tr = STD_K7
+    j = np.arange(64)
+    for p in (0, 1):
+        i = tr.prev_state[j, p]
+        b = tr.branch_input[j]
+        assert np.all(tr.next_state[i, b] == j)
+        assert np.all(tr.prev_out[j, p] == tr.out_bits[i, b])
+
+
+def test_symmetry_tables():
+    tr = STD_K7
+    # bm_index/bm_sign encode delta(~o) = -delta(o)
+    o = np.arange(4)
+    comp = 3 ^ o
+    assert np.all(tr.bm_index[o] == tr.bm_index[comp])
+    assert np.all(tr.bm_sign[o] == -tr.bm_sign[comp])
+
+
+def test_popcount():
+    x = np.array([0, 1, 3, 255, 0b1010101])
+    assert np.all(popcount(x) == [0, 1, 2, 8, 4])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 9), st.integers(2, 3), st.randoms())
+def test_random_code_trellis_invariants(k, beta, rnd):
+    polys = tuple(rnd.randrange(1 << (k - 1), 1 << k) for _ in range(beta))
+    tr = make_trellis(k, polys)
+    S = tr.num_states
+    # every state has exactly two successors and two predecessors
+    succ = tr.next_state.reshape(-1)
+    counts = np.bincount(succ, minlength=S)
+    assert np.all(counts == 2)
+    j = np.arange(S)
+    for p in (0, 1):
+        assert np.all(tr.next_state[tr.prev_state[j, p], tr.branch_input] == j)
