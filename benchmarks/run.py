@@ -5,10 +5,15 @@ metric: Mb/s for throughput tables, dB-to-theory for BER tables,
 tokens/s for the model zoo).
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+
+The ``kernels`` section additionally persists its rows to
+``BENCH_kernels.json`` (cwd) — the perf-trajectory datapoint for the
+survivor-compression work; diff it across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -17,12 +22,24 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-sized grids (slow)")
     ap.add_argument("--only", default=None,
-                    choices=["throughput", "ber", "models"])
+                    choices=["throughput", "kernels", "ber", "models"])
     args = ap.parse_args()
 
     from . import ber_tables, models_bench, throughput
 
     print("name,us_per_call,derived")
+    if args.only in (None, "kernels"):
+        rows = throughput.kernel_sweep(full=args.full)
+        for r in rows:
+            name = (f"kern_pack{int(r['pack'])}_radix{r['radix']}_"
+                    f"ft{r['ft']}" + ("_auto" if r["auto"] else ""))
+            print(f"{name},{r['us_per_call']:.1f},{r['mbps']:.2f}Mbps")
+        with open("BENCH_kernels.json", "w") as fh:
+            # workload metadata: cross-PR diffs are only meaningful when
+            # these match (sweep timing reps live in throughput.kernel_sweep)
+            json.dump({"schema": "kernel_sweep/v1", "full": args.full,
+                       "rows": rows}, fh, indent=1, sort_keys=True)
+            fh.write("\n")
     if args.only in (None, "throughput"):
         for r in throughput.main(full=args.full):
             name = f"tput_{r['table']}_" + "_".join(

@@ -28,6 +28,18 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
+def _time_best(fn, *args, reps=3):
+    """Min-of-reps: robust to the cgroup scheduling stalls of shared CPUs
+    (a single stall poisons a mean but not a min)."""
+    fn(*args).block_until_ready()              # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def throughput_framed(spec: FrameSpec, n: int = 2_000_000) -> dict:
     """Mb/s of the jitted framed decoder (pure-JAX path, compiled)."""
     rng = np.random.default_rng(0)
@@ -68,6 +80,43 @@ def unified_vs_split(n=80_000):
             fr, STD_K7, spec, unified=unified, interpret=True))
         dt = _time(fn, frames, reps=1)
         rows.append({"table": "I", "variant": "unified" if unified else "split",
+                     "us_per_call": dt * 1e6, "mbps": n / dt / 1e6})
+    return rows
+
+
+def kernel_sweep(full: bool = False):
+    """Packed-vs-unpacked x radix-2-vs-radix-4 x tile-size sweep.
+
+    The perf-trajectory benchmark for the unified kernel's survivor
+    compression (BENCH_kernels.json). The (pack=False, radix=2, ft=8) row
+    is the seed kernel; (pack=True, radix=4, ft>=32) is the optimized
+    configuration the autotuner picks. Interpret mode => relative numbers.
+    """
+    rng = np.random.default_rng(0)
+    spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
+    n = (128 if full else 32) * spec.f
+    llr = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    frames = frame_llr(llr, spec)
+
+    from repro.kernels.autotune import plan_tiles, unified_vmem_bytes
+    grid = [(False, 2, 8),                 # seed configuration
+            (False, 4, 8), (True, 2, 8), (True, 4, 8),   # one knob at a time
+            (False, 2, 32), (True, 4, 32),               # deeper tiles
+            (True, 4, "auto")]                           # autotuned
+    rows = []
+    for pack, radix, ft in grid:
+        fn = jax.jit(lambda fr, p=pack, r=radix, t=ft: ops.viterbi_decode_frames(
+            fr, STD_K7, spec, frames_per_tile=t, pack_survivors=p, radix=r,
+            interpret=True))
+        dt = _time_best(fn, frames, reps=3)
+        ft_res = (plan_tiles(STD_K7, spec, pack_survivors=pack, radix=radix,
+                             max_frames=frames.shape[0]).frames_per_tile
+                  if ft == "auto" else ft)
+        vmem, _ = unified_vmem_bytes(STD_K7, spec, ft_res,
+                                     pack_survivors=pack, radix=radix)
+        rows.append({"table": "kernels", "pack": pack, "radix": radix,
+                     "ft": ft_res, "auto": ft == "auto", "n_bits": n,
+                     "reps": 3, "vmem_kib": round(vmem / 1024, 1),
                      "us_per_call": dt * 1e6, "mbps": n / dt / 1e6})
     return rows
 

@@ -20,13 +20,17 @@ NEG = jnp.float32(-1e30)   # "minus infinity" for unreachable-ish inits
 
 
 def viterbi_forward(llr: jax.Array, trellis: Trellis,
-                    sigma0: jax.Array | None = None):
+                    sigma0: jax.Array | None = None, radix: int = 2):
     """Alg. 1: ACS over all stages.
 
     Args:
       llr: (n, beta) soft inputs (zero entries are neutral / depunctured).
       sigma0: optional (S,) initial path metrics (zeros = unknown start, as
         in framed decoding; the full decoder biases state 0).
+      radix: 2 = one trellis stage per scan step; 4 = two stages fused per
+        scan step (half the trip count — mirrors the kernels' radix-4 ACS).
+        Each fused half-step performs the identical arithmetic sequence
+        (candidates, select, max-normalize), so outputs are bit-identical.
 
     Returns:
       sel:   (n, S) int8 selector bits (0 -> predecessor 2j, 1 -> 2j+1);
@@ -41,6 +45,7 @@ def viterbi_forward(llr: jax.Array, trellis: Trellis,
     bm_half = branch_metrics_half(llr, trellis)       # (n, 2^(beta-1))
     if sigma0 is None:
         sigma0 = jnp.zeros((S,), jnp.float32)
+    assert radix in (2, 4), radix
 
     def step(sigma, bmh):
         bm = expand_half(bmh, trellis)                # (2^beta,)
@@ -50,6 +55,25 @@ def viterbi_forward(llr: jax.Array, trellis: Trellis,
         new = jnp.where(sel, cand1, cand0)
         new = new - jnp.max(new)                      # normalize (DESIGN §8)
         return new, (sel.astype(jnp.int8), jnp.argmax(new).astype(jnp.int32))
+
+    if radix == 4:
+        n = bm_half.shape[0]
+        n2 = n // 2
+
+        def pair(sigma, bmh2):                        # bmh2: (2, half)
+            sigma, (sel_a, am_a) = step(sigma, bmh2[0])
+            sigma, (sel_b, am_b) = step(sigma, bmh2[1])
+            return sigma, (jnp.stack([sel_a, sel_b]),
+                           jnp.stack([am_a, am_b]))
+
+        sigma, (sel, amax) = jax.lax.scan(
+            pair, sigma0, bm_half[:2 * n2].reshape(n2, 2, -1))
+        sel, amax = sel.reshape(2 * n2, S), amax.reshape(2 * n2)
+        if n % 2:                                     # odd-length tail stage
+            sigma, (sel_t, am_t) = step(sigma, bm_half[-1])
+            sel = jnp.concatenate([sel, sel_t[None]])
+            amax = jnp.concatenate([amax, am_t[None]])
+        return sel, sigma, amax
 
     sigma, (sel, amax) = jax.lax.scan(step, sigma0, bm_half)
     return sel, sigma, amax
@@ -77,13 +101,14 @@ def viterbi_traceback(sel: jax.Array, trellis: Trellis, start_state: jax.Array,
     return bits.astype(jnp.int32), states
 
 
-@partial(jax.jit, static_argnums=(1,))
-def viterbi_decode(llr: jax.Array, trellis: Trellis) -> jax.Array:
+@partial(jax.jit, static_argnums=(1, 2))
+def viterbi_decode(llr: jax.Array, trellis: Trellis,
+                   radix: int = 2) -> jax.Array:
     """Full-sequence decode: (n, beta) llr -> (n,) bits. Table I row (a)."""
     S = trellis.num_states
     # the encoder starts in state 0: bias the initial metrics
     sigma0 = jnp.full((S,), NEG).at[0].set(0.0)
-    sel, sigma, _ = viterbi_forward(llr, trellis, sigma0)
+    sel, sigma, _ = viterbi_forward(llr, trellis, sigma0, radix)
     start = jnp.argmax(sigma).astype(jnp.int32)
     bits, _ = viterbi_traceback(sel, trellis, start)
     return bits

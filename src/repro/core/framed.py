@@ -45,8 +45,14 @@ class FrameSpec:
 
     def validate(self):
         if self.parallel_tb:
-            assert self.f % self.f0 == 0, "f must be a multiple of f0"
-            assert self.v2s <= self.v2, "subframe overlap must fit in v2"
+            if self.f % self.f0 != 0:
+                raise ValueError(
+                    f"f={self.f} is not a multiple of f0={self.f0}; the "
+                    f"parallel traceback needs f % f0 == 0 (paper §IV-E)")
+            if self.v2s > self.v2:
+                raise ValueError(
+                    f"v2s={self.v2s} exceeds v2={self.v2}; the subframe "
+                    f"convergence overlap must fit in the frame overlap")
 
 
 def frame_llr(llr: jax.Array, spec: FrameSpec) -> jax.Array:

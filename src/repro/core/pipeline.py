@@ -21,16 +21,29 @@ __all__ = ["DecoderConfig", "make_decoder"]
 
 @dataclasses.dataclass(frozen=True)
 class DecoderConfig:
-    """Everything needed to build a decode function."""
+    """Everything needed to build a decode function.
+
+    The kernel knobs (pack_survivors / radix / frames_per_tile) default to
+    the best-known configuration — bit-packed survivors, two trellis stages
+    per scan step, VMEM-budget-autotuned tile size. Every combination is
+    bit-identical to the reference backend, so these are pure perf knobs
+    (set radix=2, pack_survivors=False, frames_per_tile=8 for the seed
+    kernel behavior).
+    """
     trellis: Trellis = STD_K7
     spec: FrameSpec = FrameSpec()
     rate: str = "1/2"
     backend: str = "reference"     # 'reference' | 'kernel' | 'kernel_split'
     interpret: bool = True         # Pallas interpret mode (CPU container)
+    pack_survivors: bool = True    # bit-pack survivors 32x (kernel backends)
+    radix: int = 4                 # 2 | 4 trellis stages per ACS step
+    frames_per_tile: int | str = "auto"   # tile size, or VMEM-planned
 
     def __post_init__(self):
         if self.rate != "1/2":
             check_alignment(self.spec.f, self.spec.v1, self.spec.v2, self.rate)
+        if self.radix not in (2, 4):
+            raise ValueError(f"radix must be 2 or 4, got {self.radix}")
 
 
 def make_decoder(cfg: DecoderConfig):
@@ -46,6 +59,8 @@ def make_decoder(cfg: DecoderConfig):
         def _decode_frames(frames):
             return kops.viterbi_decode_frames(
                 frames, cfg.trellis, cfg.spec, unified=unified,
+                frames_per_tile=cfg.frames_per_tile,
+                pack_survivors=cfg.pack_survivors, radix=cfg.radix,
                 interpret=cfg.interpret)
     else:
         raise ValueError(cfg.backend)

@@ -26,14 +26,22 @@ __all__ = ["serial_traceback", "parallel_traceback"]
 
 
 def serial_traceback(sel: jax.Array, trellis: Trellis, start_state: jax.Array,
-                     v1: int, f: int) -> jax.Array:
-    """Chase from the last stage; return the f kept bits [v1, v1+f)."""
+                     v1: int, f: int, packed: bool = False) -> jax.Array:
+    """Chase from the last stage; return the f kept bits [v1, v1+f).
+
+    ``packed=True`` reads sel as (L, ceil(S/32)) int32 bit-packed selector
+    words (kernels/packing.py layout) instead of (L, S) one-per-cell.
+    """
     prev_state = jnp.asarray(trellis.prev_state)
     kshift = trellis.k - 2
 
     def step(j, sel_t):
         bit = j >> kshift
-        i = prev_state[j, sel_t[j].astype(jnp.int32)]
+        if packed:
+            p = (sel_t[j >> 5] >> (j & 31)) & 1
+        else:
+            p = sel_t[j]
+        i = prev_state[j, p]
         return i, bit
 
     _, bits = jax.lax.scan(step, start_state.astype(jnp.int32),
@@ -43,7 +51,8 @@ def serial_traceback(sel: jax.Array, trellis: Trellis, start_state: jax.Array,
 
 def parallel_traceback(sel: jax.Array, amax: jax.Array, trellis: Trellis,
                        v1: int, f: int, f0: int, v2s: int,
-                       start: str = "boundary") -> jax.Array:
+                       start: str = "boundary",
+                       packed: bool = False) -> jax.Array:
     """Parallel traceback over ``nsub = f // f0`` subframes.
 
     Args:
@@ -55,6 +64,8 @@ def parallel_traceback(sel: jax.Array, amax: jax.Array, trellis: Trellis,
             right overlap v2 must be >= v2s so the last subframe's chase
             start stays inside the frame.
       start: 'boundary' | 'fixed'.
+      packed: sel is (L, ceil(S/32)) int32 bit-packed words instead of
+        (L, S) one-selector-per-cell (kernels/packing.py layout).
 
     Returns: (f,) decoded bits.
     """
@@ -80,7 +91,10 @@ def parallel_traceback(sel: jax.Array, amax: jax.Array, trellis: Trellis,
     def step(states, r):
         t = e - r                                     # (nsub,) current stages
         bits = states >> kshift
-        p = sel32[t, states]                          # vectorized gather
+        if packed:
+            p = (sel32[t, states >> 5] >> (states & 31)) & 1
+        else:
+            p = sel32[t, states]                      # vectorized gather
         states = prev_state[states, p]
         return states, bits
 

@@ -1,0 +1,78 @@
+"""Shared ACS scan body for the Pallas Viterbi kernels.
+
+Both kernels (viterbi_unified, viterbi_fwd) run the identical forward
+recursion — coalesced branch metrics, then the add-compare-select scan at
+radix 2 or 4 — and differ only in where the survivor selectors go (VMEM
+scratch vs HBM stream). ``acs_scan`` factors that recursion into one
+place, parameterized by a ``store(t, sel, sigma)`` callback, so a change
+to the tie-break / normalization / radix-4 pair ordering cannot drift
+between the two kernels and silently break their bit-exactness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.trellis import Trellis
+from .tables import kernel_tables, radix4_tables
+
+__all__ = ["acs_scan"]
+
+
+def acs_scan(llr_ref, bm_ref, *, trellis: Trellis, L: int, radix: int, store):
+    """Branch metrics + ACS over all L stages; returns the final sigma.
+
+    llr_ref: (FT, L, beta) kernel input ref.
+    bm_ref:  (L, FT, 2^(beta-1)) VMEM scratch, filled with the
+             symmetry-compressed branch metrics (paper Fig. 7 / eq. 9).
+    store:   callback invoked once per stage, in stage order, with
+             (t, sel (FT, S) bool, sigma (FT, S) normalized) — writes the
+             survivors wherever the calling kernel keeps them.
+
+    radix=4 fuses two stages per scan step via the fused BM indexing of
+    ``radix4_tables`` — half the trip count, bit-identical arithmetic
+    (each half-step is the exact radix-2 sequence incl. normalization).
+    """
+    S = trellis.num_states
+    FT = llr_ref.shape[0]
+    if radix == 4:
+        perm, idx2, sgn2, signs_half = radix4_tables(trellis)
+    else:
+        perm, idx_p, sgn_p, signs_half = kernel_tables(trellis)
+        idx2, sgn2 = [idx_p], [sgn_p]
+
+    # coalesced, symmetry-compressed branch metrics into VMEM
+    llr = llr_ref[...].astype(jnp.float32)           # (FT, L, beta)
+    bm_ref[...] = jnp.einsum("flb,hb->lfh", llr, signs_half)
+
+    def acs_half(sigma, bmrow, st):                  # one radix-2 half-step
+        cand = []
+        for p in (0, 1):
+            s_prev = jnp.take(sigma, perm[p], axis=1)              # (FT, S)
+            bm = jnp.take(bmrow, idx2[st][p], axis=1) * sgn2[st][p]
+            cand.append(s_prev + bm)
+        sel = (cand[1] >= cand[0])                   # ties -> i'' (Alg. 1)
+        sigma = jnp.where(sel, cand[1], cand[0])
+        sigma = sigma - jnp.max(sigma, axis=1, keepdims=True)      # normalize
+        return sigma, sel
+
+    sigma0 = jnp.zeros((FT, S), jnp.float32)
+    if radix == 4:
+        def acs_pair(t2, sigma):
+            t = 2 * t2
+            bm2 = jnp.concatenate([bm_ref[t], bm_ref[t + 1]], axis=1)
+            for st in (0, 1):                        # exact radix-2 order
+                sigma, sel = acs_half(sigma, bm2, st)
+                store(t + st, sel, sigma)
+            return sigma
+        sigma = jax.lax.fori_loop(0, L // 2, acs_pair, sigma0)
+        if L % 2:                                    # odd-length tail stage
+            sigma, sel = acs_half(sigma, bm_ref[L - 1], 0)
+            store(L - 1, sel, sigma)
+        return sigma
+
+    def acs_step(t, sigma):
+        sigma, sel = acs_half(sigma, bm_ref[t], 0)
+        store(t, sel, sigma)
+        return sigma
+    return jax.lax.fori_loop(0, L, acs_step, sigma0)

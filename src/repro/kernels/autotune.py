@@ -1,0 +1,113 @@
+"""VMEM-budget-driven tile planner for the Pallas Viterbi kernels.
+
+The seed hard-coded ``frames_per_tile=8``. That number is a *memory*
+decision in disguise: each grid step of the unified kernel keeps the whole
+per-tile working set (LLR block, compressed branch metrics, survivor
+array, argmax trace, traceback bits, output block) resident in VMEM, so
+the right tile size is "as many frames as the VMEM budget allows" — more
+frames per tile amortizes the fixed per-step scan overhead and gives
+Mosaic a longer-lived block to pipeline DMA against (paper §IV-F,
+"multiple frames per block").
+
+``plan_tiles`` picks the largest power-of-two tile whose unified-kernel
+footprint fits a conservative budget (default 2 MiB of the ~16 MiB VMEM:
+leaves room for double-buffered LLR DMA and concurrent tiles), after
+validating the FrameSpec's subframe geometry. With packed survivors the
+dominant array shrinks 32x, which is what moves the plan from FT=8-16 to
+FT>=32 — the acceptance target of this optimization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.framed import FrameSpec
+from ..core.trellis import Trellis
+from .packing import packed_width
+
+__all__ = ["TilePlan", "unified_vmem_bytes", "plan_tiles",
+           "DEFAULT_VMEM_BUDGET", "CANDIDATE_TILES"]
+# (subframe-geometry validation lives on FrameSpec.validate itself)
+
+DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024          # bytes, per grid step
+CANDIDATE_TILES = (8, 16, 32, 64, 128, 256)    # powers of two >= 1 sublane
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Chosen tile size + the footprint that justified it."""
+    frames_per_tile: int
+    vmem_bytes: int
+    breakdown: tuple          # ((name, bytes), ...) for reports/debugging
+    budget: int
+
+    def utilization(self) -> float:
+        return self.vmem_bytes / self.budget
+
+
+def _geometry(spec: FrameSpec):
+    """(f0, v2s) as the kernel sees them (serial tb = one full subframe)."""
+    if spec.parallel_tb:
+        return spec.f0, spec.v2s
+    return spec.f, spec.v2
+
+
+def unified_vmem_bytes(trellis: Trellis, spec: FrameSpec,
+                       frames_per_tile: int, *, pack_survivors: bool = False,
+                       radix: int = 2):
+    """(total_bytes, breakdown) of one unified-kernel grid step.
+
+    Mirrors the scratch_shapes + block specs in viterbi_unified.py exactly;
+    ``radix`` does not change the footprint (the fused BM row is a
+    transient concatenation), it is accepted so call sites can pass the
+    full kernel config through one interface.
+    """
+    del radix
+    S = trellis.num_states
+    beta = trellis.beta
+    half = 1 << (beta - 1)
+    L = spec.frame_len
+    FT = frames_per_tile
+    f0, v2s = _geometry(spec)
+    nsub = spec.f // f0
+    sel_w = packed_width(S) if pack_survivors else S
+
+    breakdown = (
+        ("llr_block", FT * L * beta * 4),
+        ("bm_compressed", L * FT * half * 4),
+        ("sel_survivors", L * FT * sel_w * 4),
+        ("amax", L * FT * 4),
+        ("tb_bits", (f0 + v2s) * nsub * FT * 4),
+        ("out_block", FT * spec.f * 4),
+    )
+    return sum(b for _, b in breakdown), breakdown
+
+
+def plan_tiles(trellis: Trellis, spec: FrameSpec, *,
+               pack_survivors: bool = False, radix: int = 2,
+               vmem_budget: int = DEFAULT_VMEM_BUDGET,
+               max_frames: int | None = None) -> TilePlan:
+    """Pick frames_per_tile for the unified kernel from the VMEM budget.
+
+    Returns the largest candidate tile that fits ``vmem_budget``; the
+    smallest candidate is returned even when over budget (the kernel still
+    runs — headroom just shrinks). ``max_frames`` caps the tile near the
+    actual frame count so short streams don't decode mostly padding.
+    """
+    spec.validate()
+    candidates = list(CANDIDATE_TILES)
+    if max_frames is not None:
+        # smallest candidate covering the stream in one tile is enough
+        cap = next((c for c in candidates if c >= max_frames),
+                   candidates[-1])
+        candidates = [c for c in candidates if c <= cap]
+
+    best = None
+    for ft in candidates:
+        total, breakdown = unified_vmem_bytes(
+            trellis, spec, ft, pack_survivors=pack_survivors, radix=radix)
+        plan = TilePlan(ft, total, breakdown, vmem_budget)
+        if total <= vmem_budget or best is None:
+            best = plan
+        if total > vmem_budget:
+            break
+    return best

@@ -1,8 +1,9 @@
 """Jitted public wrappers around the Pallas Viterbi kernels.
 
 Handles frame-count padding to the tile size, selects unified vs split
-(forward kernel + separate traceback) execution, and exposes one call the
-rest of the framework uses: ``viterbi_decode_frames``.
+(forward kernel + separate traceback) execution, resolves the
+``frames_per_tile='auto'`` tile plan (kernels/autotune.py), and exposes one
+call the rest of the framework uses: ``viterbi_decode_frames``.
 """
 from __future__ import annotations
 
@@ -14,6 +15,7 @@ import jax.numpy as jnp
 from ..core.framed import FrameSpec
 from ..core.traceback import parallel_traceback, serial_traceback
 from ..core.trellis import Trellis
+from .autotune import plan_tiles
 from .viterbi_fwd import forward_frames
 from .viterbi_unified import unified_decode_frames
 
@@ -29,18 +31,30 @@ def _pad_frames(frames: jax.Array, tile: int):
 
 
 @partial(jax.jit, static_argnames=("trellis", "spec", "unified",
-                                   "frames_per_tile", "interpret"))
+                                   "frames_per_tile", "pack_survivors",
+                                   "radix", "interpret"))
 def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
                           spec: FrameSpec, *, unified: bool = True,
-                          frames_per_tile: int = 8,
+                          frames_per_tile: int | str = 8,
+                          pack_survivors: bool = False, radix: int = 2,
                           interpret: bool = True) -> jax.Array:
     """(F, L, beta) LLR frames -> (F, f) decoded bits.
 
     unified=True  : the paper's single-kernel path (survivors in VMEM only).
     unified=False : prior-work baseline — forward kernel streams survivors
                     to HBM, traceback runs as a separate (vmapped) step.
+    frames_per_tile: frames decoded per kernel grid step, or 'auto' to let
+                    the VMEM-budget planner choose (autotune.plan_tiles).
+    pack_survivors: bit-pack the survivor array 32x (VMEM scratch for the
+                    unified kernel, the HBM stream for the split baseline).
+    radix         : 2, or 4 to fuse two trellis stages per ACS/traceback
+                    step. All knob combinations decode bit-identically.
     """
     spec.validate()
+    if frames_per_tile == "auto":
+        frames_per_tile = plan_tiles(
+            trellis, spec, pack_survivors=pack_survivors, radix=radix,
+            max_frames=frames.shape[0]).frames_per_tile
     # serial traceback == one subframe spanning the kept region (DESIGN §2)
     f0 = spec.f0 if spec.parallel_tb else spec.f
     v2s = spec.v2s if spec.parallel_tb else spec.v2
@@ -51,16 +65,19 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
         bits = unified_decode_frames(
             padded, trellis=trellis, v1=spec.v1, f=spec.f, v2=spec.v2,
             f0=f0, v2s=v2s, start=start, frames_per_tile=frames_per_tile,
-            interpret=interpret)
+            pack_survivors=pack_survivors, radix=radix, interpret=interpret)
         return bits[:F]
 
     sel, amax = forward_frames(padded, trellis=trellis,
                                frames_per_tile=frames_per_tile,
+                               pack_survivors=pack_survivors, radix=radix,
                                interpret=interpret)
     sel, amax = sel[:F], amax[:F]                    # HBM round-trip
     if spec.parallel_tb:
         tb = lambda s, a: parallel_traceback(s, a, trellis, spec.v1, spec.f,
-                                             spec.f0, spec.v2s, spec.start)
+                                             spec.f0, spec.v2s, spec.start,
+                                             packed=pack_survivors)
         return jax.vmap(tb)(sel, amax)
-    tb = lambda s, a: serial_traceback(s, trellis, a[-1], spec.v1, spec.f)
+    tb = lambda s, a: serial_traceback(s, trellis, a[-1], spec.v1, spec.f,
+                                       packed=pack_survivors)
     return jax.vmap(tb)(sel, amax)

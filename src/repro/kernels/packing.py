@@ -1,0 +1,84 @@
+"""Lane-wise bit-packing of survivor selectors (paper §IV-B, GPU idiom).
+
+The ACS recursion produces ONE bit of information per (stage, state): the
+selector that says which butterfly predecessor survived. The seed kernels
+stored that bit in an int32 (unified kernel VMEM scratch) or an int8 (split
+kernel's HBM stream), wasting 32x / 8x the footprint. Every GPU Viterbi
+decoder in the literature (Peng et al. arXiv:1608.00066; Mohammadidoost &
+Hashemi arXiv:2011.13579) packs survivors into machine words; this module
+is the TPU/Pallas equivalent.
+
+Layout: packing runs along the trailing (state = lane) axis, contiguous —
+word ``w`` of a packed row holds states ``[32w, 32w+32)`` with state ``s``
+at bit ``s % 32``:
+
+    packed[..., s // 32] >> (s % 32) & 1 == sel[..., s]
+
+Contiguous (not strided) layout keeps the traceback's bit-extract a single
+compare-free shift once the word is gathered, and round-trips through
+numpy's ``unpackbits`` convention trivially.
+
+All functions are pure jnp on static shapes, so they work identically
+inside Pallas kernel bodies (interpret or compiled — XLA folds the shift
+table) and at the JAX level (packing the split kernel's HBM stream).
+Codes with S < 32 states (e.g. K=5, K=4 test codes) pack into one
+zero-padded word — still a win vs S int8s for S > 4.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["BITS", "packed_width", "pack_bits", "unpack_bits", "extract_bit"]
+
+BITS = 32          # word width: int32 is the TPU-native integer lane type
+
+
+def packed_width(n: int) -> int:
+    """Number of int32 words needed for ``n`` selector bits (>= 1)."""
+    return -(-n // BITS)
+
+
+def pack_bits(sel: jnp.ndarray) -> jnp.ndarray:
+    """(..., n) {0,1}-valued -> (..., packed_width(n)) int32.
+
+    Bit ``n % 32 == 31`` lands in the int32 sign bit; two's-complement
+    wraparound in the weighted sum makes that exact.
+    """
+    n = sel.shape[-1]
+    w = packed_width(n)
+    x = sel.astype(jnp.int32)
+    if w * BITS != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, w * BITS - n)]
+        x = jnp.pad(x, pad)
+    x = x.reshape(*x.shape[:-1], w, BITS)
+    weights = jnp.left_shift(jnp.int32(1),
+                             jnp.arange(BITS, dtype=jnp.int32))
+    return jnp.sum(x * weights, axis=-1, dtype=jnp.int32)
+
+
+def unpack_bits(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(..., w) int32 -> (..., n) int32 of {0,1}; inverse of pack_bits."""
+    w = packed.shape[-1]
+    shifts = jnp.arange(BITS, dtype=jnp.int32)
+    bits = (packed[..., :, None] >> shifts) & 1      # (..., w, 32)
+    return bits.reshape(*packed.shape[:-1], w * BITS)[..., :n]
+
+
+def extract_bit(packed_row: jnp.ndarray, state: jnp.ndarray) -> jnp.ndarray:
+    """Selector bit of ``state`` from a packed row.
+
+    packed_row: (..., w) int32 packed selectors for one trellis stage.
+    state:      (...) int32 state index, broadcast-compatible with the
+                leading dims of ``packed_row``.
+
+    Uses a word-index one-hot reduction instead of a data-dependent gather
+    so it lowers to pure vector ops inside Pallas kernels (mirrors the
+    unpacked kernels' one-hot selector extraction). The ``& 1`` after the
+    arithmetic shift makes sign-extension of bit-31 words harmless.
+    """
+    w = packed_row.shape[-1]
+    word_id = state >> 5                             # state // 32
+    lanes = jnp.arange(w, dtype=jnp.int32)
+    onehot = (word_id[..., None] == lanes).astype(jnp.int32)
+    word = jnp.sum(packed_row * onehot, axis=-1)
+    return (word >> (state & (BITS - 1))) & 1

@@ -5,6 +5,13 @@ HBM (the GPU papers' "global memory") and traced back by a separate step.
 Exists so the unified kernel's memory-traffic win is measurable:
   survivor-path HBM traffic here = F * L * S * 1 byte  (written then re-read)
   survivor-path HBM traffic in the unified kernel = 0.
+
+``pack_survivors`` bit-packs the streamed selectors into int32 words
+(kernels/packing.py): F * L * ceil(S/32) * 4 bytes on the wire — 8x less
+than the int8 stream — which keeps the split-vs-unified comparison honest
+once the unified kernel packs its VMEM scratch. ``radix=4`` fuses two
+trellis stages per scan step (see tables.radix4_tables); both knobs are
+bit-exact vs the radix-2 / unpacked seed kernel.
 """
 from __future__ import annotations
 
@@ -17,55 +24,53 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.trellis import Trellis
-from .tables import kernel_tables
+from .acs import acs_scan
+from .packing import pack_bits, packed_width
 
 __all__ = ["forward_frames"]
 
 
-def _kernel(llr_ref, sel_ref, amax_ref, bm_ref, *, trellis: Trellis, L: int):
-    S = trellis.num_states
-    FT = llr_ref.shape[0]
-    perm, idx_p, sgn_p, signs_half = kernel_tables(trellis)
-
-    llr = llr_ref[...].astype(jnp.float32)
-    bm_ref[...] = jnp.einsum("flb,hb->lfh", llr, signs_half)
-
-    def acs_step(t, sigma):
-        bmh = bm_ref[t]
-        cand = []
-        for p in (0, 1):
-            s_prev = jnp.take(sigma, perm[p], axis=1)
-            bm = jnp.take(bmh, idx_p[p], axis=1) * sgn_p[p]
-            cand.append(s_prev + bm)
-        sel = (cand[1] >= cand[0])
-        sigma = jnp.where(sel, cand[1], cand[0])
-        sigma = sigma - jnp.max(sigma, axis=1, keepdims=True)
-        sel_ref[:, t, :] = sel.astype(jnp.int8)      # -> HBM-backed output
+def _kernel(llr_ref, sel_ref, amax_ref, bm_ref, *, trellis: Trellis, L: int,
+            pack: bool, radix: int):
+    # same forward recursion as the unified kernel (shared via acs.py);
+    # only the survivor destination differs: HBM-backed output refs.
+    def store(t, sel, sigma):
+        if pack:
+            sel_ref[:, t, :] = pack_bits(sel)        # -> HBM, 1 bit/state
+        else:
+            sel_ref[:, t, :] = sel.astype(jnp.int8)  # -> HBM, 1 byte/state
         amax_ref[:, t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
-        return sigma
 
-    jax.lax.fori_loop(0, L, acs_step, jnp.zeros((FT, S), jnp.float32))
+    acs_scan(llr_ref, bm_ref, trellis=trellis, L=L, radix=radix, store=store)
 
 
-@functools.partial(jax.jit, static_argnames=("trellis", "frames_per_tile",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "trellis", "frames_per_tile", "pack_survivors", "radix", "interpret"))
 def forward_frames(frames: jax.Array, *, trellis: Trellis,
-                   frames_per_tile: int = 8, interpret: bool = True):
-    """(F, L, beta) llr -> (sel (F, L, S) int8, amax (F, L) int32) in HBM."""
+                   frames_per_tile: int = 8, pack_survivors: bool = False,
+                   radix: int = 2, interpret: bool = True):
+    """(F, L, beta) llr -> (sel, amax (F, L) int32) in HBM.
+
+    sel is (F, L, S) int8, or (F, L, ceil(S/32)) int32 when packed.
+    """
     F, L, beta = frames.shape
     FT = frames_per_tile
     assert F % FT == 0, (F, FT)
+    assert radix in (2, 4), radix
     S = trellis.num_states
     half = 1 << (trellis.beta - 1)
+    sel_w = packed_width(S) if pack_survivors else S
+    sel_dt = jnp.int32 if pack_survivors else jnp.int8
 
-    kern = functools.partial(_kernel, trellis=trellis, L=L)
+    kern = functools.partial(_kernel, trellis=trellis, L=L,
+                             pack=pack_survivors, radix=radix)
     return pl.pallas_call(
         kern,
         grid=(F // FT,),
         in_specs=[pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))],
-        out_specs=[pl.BlockSpec((FT, L, S), lambda i: (i, 0, 0)),
+        out_specs=[pl.BlockSpec((FT, L, sel_w), lambda i: (i, 0, 0)),
                    pl.BlockSpec((FT, L), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((F, L, S), jnp.int8),
+        out_shape=[jax.ShapeDtypeStruct((F, L, sel_w), sel_dt),
                    jax.ShapeDtypeStruct((F, L), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((L, FT, half), jnp.float32)],
         interpret=interpret,

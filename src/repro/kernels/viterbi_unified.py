@@ -19,16 +19,32 @@ TPU mapping (DESIGN.md §2):
   * the parallel traceback advances all ``nsub`` subframe cursors of all
     ``FT`` frames in lock-step: the backward pass costs f0+v2s vector steps.
 
-VMEM budget per grid step (K=7, L=v1+f+v2≈340, FT=8, f0+v2s≈77):
-  llr block       FT*L*beta*4      ≈  21 KiB
-  bm (compressed) L*FT*2^(b-1)*4   ≈  21 KiB
-  sel (survivors) L*FT*S*4         ≈ 680 KiB   <- the array the paper keeps
-  amax            L*FT*4           ≈  10 KiB      out of global memory
-  tb bits         (f0+v2s)*FT*nsub ≈  20 KiB
-  total ≈ 0.75 MiB of ~16 MiB VMEM -> ~21 concurrent tiles' worth of
-  headroom; FT and the grid give Mosaic room to double-buffer the LLR DMA.
-  (sel could be bit-packed 32x as on GPU; int32 keeps the interpret oracle
-  simple and still fits with large margin — see EXPERIMENTS.md §Perf.)
+Two perf knobs added on top of the seed kernel (both bit-exact vs the
+pure-JAX oracle — see kernels/packing.py and kernels/tables.py):
+  * ``pack_survivors``: the survivor array stores 1 selector *bit* per
+    (stage, state); packing 32 states per int32 word shrinks the dominant
+    VMEM array 32x and is what makes frames_per_tile >= 32 fit.
+  * ``radix=4``: two trellis stages fused per scan step (and per traceback
+    step) with the fused branch-metric table of ``radix4_tables`` — half
+    the trip count on both hot loops, identical arithmetic per stage.
+
+VMEM budget per grid step (K=7, L=v1+f+v2≈340, f0+v2s≈77, W=ceil(S/32)=2):
+
+                          unpacked, FT=8          packed, FT=32
+  llr block   FT*L*beta*4          ≈ 21 KiB              ≈  85 KiB
+  bm (eq. 9)  L*FT*2^(b-1)*4       ≈ 21 KiB              ≈  85 KiB
+  sel         L*FT*S*4             ≈ 680 KiB     L*FT*W*4 ≈ 85 KiB
+  amax        L*FT*4               ≈ 10 KiB              ≈  43 KiB
+  tb bits     (f0+v2s)*nsub*FT*4   ≈ 20 KiB              ≈  77 KiB
+  total                            ≈ 0.75 MiB            ≈ 0.37 MiB
+
+i.e. packing turns ``sel`` from ~90% of the footprint into a co-equal
+term, so 4x the frames per tile still costs half the seed's VMEM — that
+headroom is what kernels/autotune.py spends. (On real Mosaic the packed
+(…, W=2) trailing dim is lane-padded to 128, so the full 32x only
+materializes for S >= 4096 states or a sublane-major relayout; the
+interpret-mode model and the scratch *spec* already account 32x, which is
+the honest budget for the GPU target the paper describes.)
 """
 from __future__ import annotations
 
@@ -41,48 +57,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.trellis import Trellis
-from .tables import kernel_tables
+from .acs import acs_scan
+from .packing import extract_bit, pack_bits, packed_width
 
 __all__ = ["unified_decode_frames"]
 
 
 def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
             trellis: Trellis, v1: int, f: int, v2: int, f0: int, v2s: int,
-            start: str):
+            start: str, pack: bool, radix: int):
     S = trellis.num_states
     kshift = trellis.k - 2
-    half = 1 << (trellis.beta - 1)
     L = v1 + f + v2
     FT = llr_ref.shape[0]
     nsub = f // f0
 
-    # trellis tables, constant-folded from iota (see tables.py)
-    perm, idx_p, sgn_p, signs_half = kernel_tables(trellis)
-
-    # ---- phase 1: coalesced, symmetry-compressed branch metrics (Fig. 7) --
-    llr = llr_ref[...].astype(jnp.float32)           # (FT, L, beta)
-    bm_ref[...] = jnp.einsum("flb,hb->lfh", llr, signs_half)   # (L, FT, half)
-
-    # ---- phase 2: ACS over stages, survivors stay in VMEM (Alg. 3) -------
-    def acs_step(t, sigma):                          # sigma: (FT, S)
-        bmh = bm_ref[t]                              # (FT, half)
-        cand = []
-        for p in (0, 1):
-            s_prev = jnp.take(sigma, perm[p], axis=1)              # (FT, S)
-            bm = jnp.take(bmh, idx_p[p], axis=1) * sgn_p[p]        # (FT, S)
-            cand.append(s_prev + bm)
-        sel = (cand[1] >= cand[0])                   # ties -> i'' (Alg. 1)
-        sigma = jnp.where(sel, cand[1], cand[0])
-        sigma = sigma - jnp.max(sigma, axis=1, keepdims=True)      # normalize
-        sel_ref[t] = sel.astype(jnp.int32)
+    # ---- phases 1+2: branch metrics + ACS, survivors stay in VMEM --------
+    # (Fig. 7 / Alg. 3; recursion shared with viterbi_fwd via acs.py)
+    def store(t, sel, sigma):
+        sel_ref[t] = pack_bits(sel) if pack else sel.astype(jnp.int32)
         amax_ref[t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
-        return sigma
 
-    sigma0 = jnp.zeros((FT, S), jnp.float32)
-    jax.lax.fori_loop(0, L, acs_step, sigma0)
+    acs_scan(llr_ref, bm_ref, trellis=trellis, L=L, radix=radix, store=store)
 
     # ---- phase 3: parallel traceback (paper §IV-D, Fig. 5) ---------------
-    sel_all = sel_ref[...]                           # (L, FT, S) — VMEM read
+    sel_all = sel_ref[...]                           # (L, FT, W|S) VMEM read
     amax_all = amax_ref[...]                         # (L, FT)
     q = jnp.arange(nsub, dtype=jnp.int32)
     e = v1 + (q + 1) * f0 - 1 + v2s                  # chase starts, (nsub,)
@@ -92,15 +91,28 @@ def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
         states = jnp.zeros((nsub, FT), jnp.int32)
     lane = jax.lax.broadcasted_iota(jnp.int32, (nsub, FT, S), 2)
 
-    def tb_step(r, states):                          # states: (nsub, FT)
-        t = e - r
-        tb_ref[r] = (states >> kshift)               # decoded bits at stage t
-        rows = jnp.take(sel_all, t, axis=0)          # (nsub, FT, S)
+    def sel_at(t, states):                           # selector bit (nsub,FT)
+        rows = jnp.take(sel_all, t, axis=0)          # (nsub, FT, W|S)
+        if pack:
+            return extract_bit(rows, states)
         onehot = (states[..., None] == lane).astype(jnp.int32)
-        p = jnp.sum(rows * onehot, axis=2)           # selector bit, (nsub,FT)
+        return jnp.sum(rows * onehot, axis=2)
+
+    def tb_step(r, states):                          # states: (nsub, FT)
+        tb_ref[r] = (states >> kshift)               # decoded bits at e - r
+        p = sel_at(e - r, states)
         return ((states << 1) & (S - 1)) | p         # butterfly arithmetic
 
-    jax.lax.fori_loop(0, f0 + v2s, tb_step, states)
+    T = f0 + v2s
+    if radix == 4:
+        def tb_pair(r2, states):
+            states = tb_step(2 * r2, states)
+            return tb_step(2 * r2 + 1, states)
+        states = jax.lax.fori_loop(0, T // 2, tb_pair, states)
+        if T % 2:
+            states = tb_step(T - 1, states)
+    else:
+        jax.lax.fori_loop(0, T, tb_step, states)
 
     # ---- phase 4: assemble + single coalesced HBM write ------------------
     tb = tb_ref[...]                                 # (f0+v2s, nsub, FT)
@@ -111,26 +123,32 @@ def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "trellis", "v1", "f", "v2", "f0", "v2s", "start", "frames_per_tile",
-    "interpret"))
+    "pack_survivors", "radix", "interpret"))
 def unified_decode_frames(frames: jax.Array, *, trellis: Trellis, v1: int,
                           f: int, v2: int, f0: int, v2s: int,
                           start: str = "boundary", frames_per_tile: int = 8,
+                          pack_survivors: bool = False, radix: int = 2,
                           interpret: bool = True) -> jax.Array:
     """Decode (F, L, beta) LLR frames -> (F, f) bits with the unified kernel.
 
     F must be a multiple of ``frames_per_tile`` (ops.py pads).
+    ``pack_survivors`` bit-packs the VMEM survivor scratch 32x; ``radix=4``
+    fuses two trellis stages per ACS/traceback step. Both are bit-exact.
     """
     F, L, beta = frames.shape
     assert L == v1 + f + v2, (L, v1, f, v2)
     assert f % f0 == 0 and v2s <= v2
+    assert radix in (2, 4), radix
     FT = frames_per_tile
     assert F % FT == 0, (F, FT)
     S = trellis.num_states
     half = 1 << (trellis.beta - 1)
     nsub = f // f0
+    sel_w = packed_width(S) if pack_survivors else S
 
     kern = functools.partial(_kernel, trellis=trellis, v1=v1, f=f, v2=v2,
-                             f0=f0, v2s=v2s, start=start)
+                             f0=f0, v2s=v2s, start=start,
+                             pack=pack_survivors, radix=radix)
     return pl.pallas_call(
         kern,
         grid=(F // FT,),
@@ -138,7 +156,7 @@ def unified_decode_frames(frames: jax.Array, *, trellis: Trellis, v1: int,
         out_specs=pl.BlockSpec((FT, f), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((F, f), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((L, FT, S), jnp.int32),       # survivor selectors
+            pltpu.VMEM((L, FT, sel_w), jnp.int32),   # survivors (maybe packed)
             pltpu.VMEM((L, FT), jnp.int32),          # per-stage argmax states
             pltpu.VMEM((L, FT, half), jnp.float32),  # compressed BMs (eq. 9)
             pltpu.VMEM((f0 + v2s, nsub, FT), jnp.int32),  # traceback bits

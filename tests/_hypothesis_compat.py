@@ -1,0 +1,64 @@
+"""Property-test shim: real `hypothesis` when installed, fallback otherwise.
+
+The hermetic CI container has no `hypothesis` wheel (and installs are not
+allowed), so this module re-exports (given, settings, st) from hypothesis
+when available and otherwise degrades ``@given`` to a deterministic
+8-example sweep drawn from a seeded numpy Generator. Coverage is thinner
+than real hypothesis shrinking/search, but the property suites keep
+running everywhere.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda r: int(r.integers(lo, hi + 1)))
+
+        @staticmethod
+        def sampled_from(xs):
+            seq = list(xs)
+            return _Strategy(lambda r: seq[int(r.integers(0, len(seq)))])
+
+        @staticmethod
+        def randoms():
+            return _Strategy(
+                lambda r: random.Random(int(r.integers(0, 2**32))))
+
+    class settings:  # noqa: N801
+        def __init__(self, **_kw):
+            pass
+
+        def __call__(self, f):            # decorator form: pass through
+            return f
+
+        @staticmethod
+        def register_profile(*_a, **_kw):
+            pass
+
+        @staticmethod
+        def load_profile(*_a, **_kw):
+            pass
+
+    def given(*strats):
+        # NB: the wrapper must be zero-arg (not functools.wraps) or pytest
+        # would resolve the wrapped function's params as fixtures.
+        def deco(f):
+            def run():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(8):
+                    f(*[s.draw(rng) for s in strats])
+            run.__name__ = f.__name__
+            run.__doc__ = f.__doc__
+            return run
+        return deco

@@ -1,0 +1,75 @@
+"""Unit tests for kernels/autotune.py — the VMEM-budget tile planner."""
+import pytest
+
+from repro.core import FrameSpec, STD_K7
+from repro.core.trellis import make_trellis
+from repro.kernels.autotune import (CANDIDATE_TILES, DEFAULT_VMEM_BUDGET,
+                                    plan_tiles, unified_vmem_bytes)
+
+SPEC = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
+
+
+def test_footprint_matches_kernel_scratch():
+    """The model's sel term is the kernel's (L, FT, S) int32 scratch, and
+    packing shrinks exactly that term 32x for S=64 (the acceptance spec:
+    (L, FT, S) -> (L, FT, S // 32))."""
+    L, FT, S = SPEC.frame_len, 8, STD_K7.num_states
+    _, plain = unified_vmem_bytes(STD_K7, SPEC, FT)
+    _, packed = unified_vmem_bytes(STD_K7, SPEC, FT, pack_survivors=True)
+    d_plain, d_packed = dict(plain), dict(packed)
+    assert d_plain["sel_survivors"] == L * FT * S * 4
+    assert d_packed["sel_survivors"] == L * FT * (S // 32) * 4
+    assert d_plain["sel_survivors"] == 32 * d_packed["sel_survivors"]
+    # everything else is knob-independent
+    for k in d_plain:
+        if k != "sel_survivors":
+            assert d_plain[k] == d_packed[k]
+
+
+def test_footprint_scales_linearly_in_ft():
+    t8, _ = unified_vmem_bytes(STD_K7, SPEC, 8)
+    t32, _ = unified_vmem_bytes(STD_K7, SPEC, 32)
+    assert t32 == 4 * t8
+
+
+def test_packed_plan_is_deeper():
+    plain = plan_tiles(STD_K7, SPEC)
+    packed = plan_tiles(STD_K7, SPEC, pack_survivors=True)
+    assert plain.frames_per_tile >= 8
+    assert packed.frames_per_tile >= 32          # the acceptance target
+    assert packed.frames_per_tile > plain.frames_per_tile
+    assert packed.vmem_bytes <= packed.budget == DEFAULT_VMEM_BUDGET
+
+
+def test_plan_respects_budget_and_floor():
+    # a tiny budget still yields the smallest candidate (kernel must run)
+    p = plan_tiles(STD_K7, SPEC, vmem_budget=1)
+    assert p.frames_per_tile == CANDIDATE_TILES[0]
+    # a huge budget tops out at the largest candidate
+    p = plan_tiles(STD_K7, SPEC, pack_survivors=True, vmem_budget=1 << 30)
+    assert p.frames_per_tile == CANDIDATE_TILES[-1]
+    assert 0 < p.utilization() < 1
+
+
+def test_plan_caps_at_stream_length():
+    p = plan_tiles(STD_K7, SPEC, pack_survivors=True, max_frames=5)
+    assert p.frames_per_tile == 8                # one tile covers 5 frames
+
+
+def test_plan_scales_with_state_count():
+    """K=9 (S=256) frames are 4x heavier: the plan must shrink, not OOM."""
+    k9 = make_trellis(9, (0o753, 0o561))
+    p7 = plan_tiles(STD_K7, SPEC, pack_survivors=True)
+    p9 = plan_tiles(k9, SPEC, pack_survivors=True)
+    assert p9.frames_per_tile < p7.frames_per_tile
+    assert p9.vmem_bytes <= p9.budget
+
+
+def test_geometry_validation_errors():
+    """plan_tiles rejects broken subframe geometry with actionable errors
+    (via FrameSpec.validate — one source of truth for the invariants)."""
+    with pytest.raises(ValueError, match="multiple of f0"):
+        plan_tiles(STD_K7, FrameSpec(f=256, v1=20, v2=45, f0=48, v2s=45))
+    with pytest.raises(ValueError, match="exceeds v2"):
+        plan_tiles(STD_K7, FrameSpec(f=256, v1=20, v2=20, f0=32, v2s=45))
+    plan_tiles(STD_K7, SPEC)                     # sane spec passes

@@ -87,6 +87,77 @@ def test_kernel_other_codes(rng, k, polys):
     assert np.array_equal(got, want)
 
 
+@pytest.mark.parametrize("pack", [False, True])
+@pytest.mark.parametrize("radix", [2, 4])
+def test_unified_kernel_knobs_match_ref(rng, pack, radix):
+    """Bit-packed survivors and radix-4 ACS are bit-exact, including the
+    odd-length tail paths (L odd, f0+v2s odd)."""
+    bits = rng.integers(0, 2, 640)
+    spec = FrameSpec(f=64, v1=20, v2=21, f0=16, v2s=21)   # f0+v2s = 37, odd
+    frames = _frames(bits, STD_K7, spec, rng)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, unified=True, pack_survivors=pack, radix=radix))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("pack", [False, True])
+@pytest.mark.parametrize("radix", [2, 4])
+def test_split_kernel_knobs_match_ref(rng, pack, radix):
+    """The split path streams (possibly packed) survivors through HBM and
+    traces back at the JAX level — same bits for every knob combo."""
+    bits = rng.integers(0, 2, 600)
+    spec = FrameSpec(f=64, v1=20, v2=20, f0=16, v2s=20)
+    frames = _frames(bits, STD_K7, spec, rng)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, unified=False, pack_survivors=pack,
+        radix=radix))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("k,polys", [(7, (0o171, 0o133)),
+                                     (9, (0o753, 0o561))])
+def test_deep_tiles_packed_radix4(rng, k, polys):
+    """frames_per_tile >= 32 (the packed-survivor headroom) stays exact for
+    K=7 and K=9 — the acceptance-criteria codes."""
+    tr = make_trellis(k, polys)
+    bits = rng.integers(0, 2, 64 * 6)
+    spec = FrameSpec(f=64, v1=16, v2=16, f0=16, v2s=16)
+    frames = _frames(bits, tr, spec, rng, snr=5.0)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, tr, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, tr, spec, frames_per_tile=32, pack_survivors=True, radix=4))
+    assert np.array_equal(got, want)
+
+
+def test_auto_tile_plan_decodes(rng):
+    bits = rng.integers(0, 2, 500)
+    spec = FrameSpec(f=64, v1=16, v2=16, f0=16, v2s=16)
+    frames = _frames(bits, STD_K7, spec, rng)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, frames_per_tile="auto", pack_survivors=True,
+        radix=4))
+    assert np.array_equal(got, want)
+
+
+def test_forward_kernel_packed_stream(rng):
+    """Packed split-kernel survivors == pack_bits(unpacked oracle sel)."""
+    from repro.kernels.packing import pack_bits
+    from repro.kernels.viterbi_fwd import forward_frames
+    bits = rng.integers(0, 2, 500)
+    spec = FrameSpec(f=64, v1=16, v2=16)
+    frames = _frames(bits, STD_K7, spec, rng)
+    Fp = -(-frames.shape[0] // 8) * 8
+    padded = jnp.pad(frames, ((0, Fp - frames.shape[0]), (0, 0), (0, 0)))
+    sel, amax = forward_frames(padded, trellis=STD_K7, pack_survivors=True)
+    sel_w, amax_w = ref.forward_frames_ref(padded, STD_K7)
+    assert sel.shape == (Fp, spec.frame_len, 2)      # S=64 -> 2 words
+    assert np.array_equal(np.asarray(sel), np.asarray(pack_bits(sel_w)))
+    assert np.array_equal(np.asarray(amax), np.asarray(amax_w))
+
+
 def test_kernel_frame_padding(rng):
     """Frame counts not divisible by the tile size are padded + unpadded."""
     bits = rng.integers(0, 2, 64 * 5)                  # 5 frames, tile=8

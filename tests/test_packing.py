@@ -1,0 +1,60 @@
+"""Unit tests for kernels/packing.py — survivor bit-pack round trips."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.packing import (BITS, extract_bit, pack_bits,
+                                   packed_width, unpack_bits)
+
+
+@pytest.mark.parametrize("n", [1, 8, 16, 31, 32, 33, 64, 100, 256])
+def test_pack_unpack_roundtrip(rng, n):
+    sel = rng.integers(0, 2, size=(5, 7, n))
+    packed = pack_bits(jnp.asarray(sel))
+    assert packed.shape == (5, 7, packed_width(n))
+    assert packed.dtype == jnp.int32
+    back = np.asarray(unpack_bits(packed, n))
+    assert np.array_equal(back, sel)
+
+
+def test_packed_width():
+    assert [packed_width(n) for n in (1, 31, 32, 33, 64, 65)] == \
+        [1, 1, 1, 2, 2, 3]
+
+
+def test_layout_matches_numpy_bitorder(rng):
+    """State s lands at bit s%32 of word s//32 (contiguous little-endian)."""
+    sel = rng.integers(0, 2, size=(64,))
+    packed = np.asarray(pack_bits(jnp.asarray(sel)))
+    want = np.packbits(sel.astype(np.uint8), bitorder="little")
+    assert np.array_equal(packed.view(np.uint8), want)
+
+
+def test_sign_bit_roundtrip():
+    """Bit 31 uses the int32 sign bit; wraparound must keep it exact."""
+    sel = np.zeros(32, np.int64)
+    sel[31] = 1
+    packed = np.asarray(pack_bits(jnp.asarray(sel)))
+    assert packed[0] == np.int32(-2**31)
+    assert np.array_equal(np.asarray(unpack_bits(jnp.asarray(packed), 32)),
+                          sel)
+
+
+@pytest.mark.parametrize("n", [8, 64, 100])
+def test_extract_bit_matches_indexing(rng, n):
+    sel = rng.integers(0, 2, size=(4, n))
+    packed = pack_bits(jnp.asarray(sel))
+    states = jnp.asarray(rng.integers(0, n, size=(4,)), jnp.int32)
+    got = np.asarray(extract_bit(packed, states))
+    want = sel[np.arange(4), np.asarray(states)]
+    assert np.array_equal(got, want)
+
+
+def test_extract_bit_broadcasts(rng):
+    sel = rng.integers(0, 2, size=(3, 5, 64))
+    packed = pack_bits(jnp.asarray(sel))
+    states = jnp.asarray(rng.integers(0, 64, size=(3, 5)), jnp.int32)
+    got = np.asarray(extract_bit(packed, states))
+    i, j = np.mgrid[0:3, 0:5]
+    assert np.array_equal(got, sel[i, j, np.asarray(states)])
+    assert BITS == 32

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (FrameSpec, STD_K7, encode, framed_decode,
                         viterbi_decode)
@@ -51,6 +51,58 @@ def test_puncture_inverse_property(seed, rate, n):
     mask = np.tile(PATTERNS[rate], (1, n)).T[:n].astype(bool)
     assert np.array_equal(y[mask], np.asarray(x)[mask])
     assert np.all(y[~mask] == 0)
+
+
+@given(st.integers(0, 2**32 - 1),
+       st.sampled_from([(False, 2), (False, 4), (True, 2), (True, 4)]),
+       st.sampled_from([8, 16, "auto"]))
+def test_kernel_variants_bit_identical_to_reference(seed, knobs, ft):
+    """EVERY kernel configuration — packed/unpacked survivors, radix-2/4,
+    any tile size — must decode random LLRs bit-identically to the
+    core.decoder-based oracle, on both the unified and split paths."""
+    from repro.core.framed import frame_llr
+    from repro.kernels import ops, ref
+    pack, radix = knobs
+    rng = np.random.default_rng(seed)
+    specs = [FrameSpec(f=64, v1=20, v2=20, f0=16, v2s=20),
+             FrameSpec(f=64, v1=16, v2=21, f0=8, v2s=21),
+             FrameSpec(f=96, v1=12, v2=24, f0=24, v2s=20, start="fixed")]
+    spec = specs[int(rng.integers(0, len(specs)))]
+    llr = jnp.asarray(rng.standard_normal((5 * spec.f, 2))
+                      .astype(np.float32))          # pure noise: worst case
+    frames = frame_llr(llr, spec)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    unified = bool(seed & 1)                        # alternate the two paths
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, unified=unified, frames_per_tile=ft,
+        pack_survivors=pack, radix=radix))
+    assert np.array_equal(got, want), (spec, pack, radix, ft, unified)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(50, 300))
+def test_radix4_forward_bit_identical(seed, n):
+    """The fused two-stage ACS is the same arithmetic: sel/sigma/amax and
+    the full decode agree bit-for-bit with radix-2, odd lengths included."""
+    from repro.core.decoder import viterbi_forward
+    rng = np.random.default_rng(seed)
+    llr = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    s2, g2, a2 = viterbi_forward(llr, STD_K7)
+    s4, g4, a4 = viterbi_forward(llr, STD_K7, None, 4)
+    assert np.array_equal(np.asarray(s2), np.asarray(s4))
+    assert np.array_equal(np.asarray(g2), np.asarray(g4))
+    assert np.array_equal(np.asarray(a2), np.asarray(a4))
+    assert np.array_equal(np.asarray(viterbi_decode(llr, STD_K7)),
+                          np.asarray(viterbi_decode(llr, STD_K7, 4)))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 300))
+def test_pack_roundtrip_property(seed, n):
+    from repro.kernels.packing import pack_bits, unpack_bits, packed_width
+    rng = np.random.default_rng(seed)
+    sel = rng.integers(0, 2, size=(3, n))
+    packed = pack_bits(jnp.asarray(sel))
+    assert packed.shape == (3, packed_width(n))
+    assert np.array_equal(np.asarray(unpack_bits(packed, n)), sel)
 
 
 @given(st.integers(0, 2**32 - 1))

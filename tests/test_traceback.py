@@ -40,7 +40,7 @@ def test_larger_v2s_improves_parallel_tb(rng):
 
 
 def test_parallel_tb_validation():
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="multiple of f0"):
         FrameSpec(128, 20, 20, f0=24, v2s=20).validate()   # 128 % 24 != 0
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="exceeds v2"):
         FrameSpec(128, 20, 20, f0=32, v2s=30).validate()   # v2s > v2
