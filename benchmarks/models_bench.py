@@ -1,9 +1,13 @@
 """Per-arch train/decode step timing on reduced configs (CPU wall clock;
-relative numbers). One row per assigned architecture."""
+relative numbers). One row per assigned architecture, plus one row for the
+Viterbi decoder itself — timed through the LIBRARY DEFAULTS (DecoderConfig:
+packed survivors, radix-4, autotuned tiles), never a hand-rolled seed-era
+knob set, so this row tracks whatever the blessed configuration is."""
 from __future__ import annotations
 
 import time
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -43,8 +47,29 @@ def bench_arch(arch: str, reps: int = 5) -> dict:
             "tokens_per_s": B * S / dt}
 
 
+def bench_decoder(reps: int = 3) -> dict:
+    """Default-config Viterbi decode (kernel backend, DecoderConfig
+    defaults — no explicit pack_survivors/radix/tile overrides)."""
+    from repro.core import DecoderConfig, FrameSpec, make_decoder
+    cfg = DecoderConfig(spec=FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45),
+                        backend="kernel")
+    dec = make_decoder(cfg)
+    n = 16 * cfg.spec.f
+    rng = np.random.default_rng(0)
+    llr = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    dec(llr, n).block_until_ready()                    # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        dec(llr, n).block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    return {"arch": "viterbi_k7_default", "us_per_call": dt * 1e6,
+            "tokens_per_s": n / dt}
+
+
 def main():
-    rows = []
+    rows = [bench_decoder()]
+    print(f"{rows[0]['arch']},{rows[0]['us_per_call']:.0f},"
+          f"{rows[0]['tokens_per_s']:.0f}")
     for arch in ARCH_IDS:
         r = bench_arch(arch)
         rows.append(r)

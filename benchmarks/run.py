@@ -13,8 +13,6 @@ survivor-compression work; diff it across PRs.
 from __future__ import annotations
 
 import argparse
-import json
-import sys
 
 
 def main() -> None:
@@ -29,17 +27,27 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     if args.only in (None, "kernels"):
+        from .trajectory import append_run
         rows = throughput.kernel_sweep(full=args.full)
         for r in rows:
             name = (f"kern_pack{int(r['pack'])}_radix{r['radix']}_"
-                    f"ft{r['ft']}" + ("_auto" if r["auto"] else ""))
+                    f"ft{r['ft']}_{r['layout']}"
+                    + ("_bf16" if r["bm_dtype"] == "bfloat16" else "")
+                    + ("_auto" if r["auto"] else ""))
             print(f"{name},{r['us_per_call']:.1f},{r['mbps']:.2f}Mbps")
-        with open("BENCH_kernels.json", "w") as fh:
-            # workload metadata: cross-PR diffs are only meaningful when
-            # these match (sweep timing reps live in throughput.kernel_sweep)
-            json.dump({"schema": "kernel_sweep/v1", "full": args.full,
-                       "rows": rows}, fh, indent=1, sort_keys=True)
-            fh.write("\n")
+        stream_rows = throughput.streaming_bench(full=args.full)
+        for r in stream_rows:
+            print(f"stream_{r['variant']},{r['us_per_call']:.1f},"
+                  f"{r['mbps']:.2f}Mbps")
+        plans = throughput.plan_rows()
+        for r in plans:
+            print(f"plan_{r['plan']},0,ft{r['ft']}@{r['vmem_kib']}KiB")
+        # workload metadata: cross-PR diffs are only meaningful when
+        # these match (sweep timing reps live in throughput.kernel_sweep);
+        # runs APPEND to BENCH_kernels.json — the per-PR trajectory the
+        # regression gate (scripts/bench_gate.py) checks against.
+        append_run({"full": args.full, "rows": rows,
+                    "streaming": stream_rows, "plans": plans})
     if args.only in (None, "throughput"):
         for r in throughput.main(full=args.full):
             name = f"tput_{r['table']}_" + "_".join(

@@ -85,12 +85,15 @@ def unified_vs_split(n=80_000):
 
 
 def kernel_sweep(full: bool = False):
-    """Packed-vs-unpacked x radix-2-vs-radix-4 x tile-size sweep.
+    """Packed x radix x tile-size x layout x bm-dtype sweep.
 
     The perf-trajectory benchmark for the unified kernel's survivor
     compression (BENCH_kernels.json). The (pack=False, radix=2, ft=8) row
-    is the seed kernel; (pack=True, radix=4, ft>=32) is the optimized
-    configuration the autotuner picks. Interpret mode => relative numbers.
+    is the seed kernel; (pack=True, radix=4, ft>=32) is PR-1's optimized
+    configuration; the 'sublane' rows are the Mosaic-native layout whose
+    packing survives hardware lane padding (their vmem_mosaic_kib column
+    is the honest hardware footprint — compare it with the lane rows').
+    Interpret mode => relative numbers.
     """
     rng = np.random.default_rng(0)
     spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
@@ -99,25 +102,127 @@ def kernel_sweep(full: bool = False):
     frames = frame_llr(llr, spec)
 
     from repro.kernels.autotune import plan_tiles, unified_vmem_bytes
-    grid = [(False, 2, 8),                 # seed configuration
-            (False, 4, 8), (True, 2, 8), (True, 4, 8),   # one knob at a time
-            (False, 2, 32), (True, 4, 32),               # deeper tiles
-            (True, 4, "auto")]                           # autotuned
+    grid = [(False, 2, 8, "lane", "float32"),            # seed configuration
+            (False, 4, 8, "lane", "float32"),            # one knob at a time
+            (True, 2, 8, "lane", "float32"),
+            (True, 4, 8, "lane", "float32"),
+            (False, 2, 32, "lane", "float32"),           # deeper tiles
+            (True, 4, 32, "lane", "float32"),
+            (True, 4, "auto", "lane", "float32"),        # PR-1 autotuned
+            (True, 4, 8, "sublane", "float32"),          # Mosaic-native
+            (True, 4, 32, "sublane", "float32"),
+            (True, 4, "auto", "sublane", "float32"),
+            (True, 4, 32, "sublane", "bfloat16")]        # compressed BMs
     rows = []
-    for pack, radix, ft in grid:
-        fn = jax.jit(lambda fr, p=pack, r=radix, t=ft: ops.viterbi_decode_frames(
-            fr, STD_K7, spec, frames_per_tile=t, pack_survivors=p, radix=r,
-            interpret=True))
+    for pack, radix, ft, layout, bm_dtype in grid:
+        fn = jax.jit(lambda fr, p=pack, r=radix, t=ft, lay=layout,
+                     bd=bm_dtype: ops.viterbi_decode_frames(
+                         fr, STD_K7, spec, frames_per_tile=t,
+                         pack_survivors=p, radix=r, layout=lay, bm_dtype=bd,
+                         interpret=True))
         dt = _time_best(fn, frames, reps=3)
         ft_res = (plan_tiles(STD_K7, spec, pack_survivors=pack, radix=radix,
+                             layout=layout, bm_dtype=bm_dtype,
                              max_frames=frames.shape[0]).frames_per_tile
                   if ft == "auto" else ft)
         vmem, _ = unified_vmem_bytes(STD_K7, spec, ft_res,
-                                     pack_survivors=pack, radix=radix)
+                                     pack_survivors=pack, radix=radix,
+                                     layout=layout, bm_dtype=bm_dtype,
+                                     mosaic=False)
+        vmem_m, _ = unified_vmem_bytes(STD_K7, spec, ft_res,
+                                       pack_survivors=pack, radix=radix,
+                                       layout=layout, bm_dtype=bm_dtype,
+                                       mosaic=True)
         rows.append({"table": "kernels", "pack": pack, "radix": radix,
-                     "ft": ft_res, "auto": ft == "auto", "n_bits": n,
-                     "reps": 3, "vmem_kib": round(vmem / 1024, 1),
+                     "ft": ft_res, "auto": ft == "auto", "layout": layout,
+                     "bm_dtype": bm_dtype, "n_bits": n, "reps": 3,
+                     "vmem_kib": round(vmem / 1024, 1),
+                     "vmem_mosaic_kib": round(vmem_m / 1024, 1),
                      "us_per_call": dt * 1e6, "mbps": n / dt / 1e6})
+    return rows
+
+
+def streaming_bench(full: bool = False):
+    """Streaming front-end vs single-shot decode on a multi-chunk stream.
+
+    Both run the compiled reference backend (the kernel backends interpret
+    on CPU, which would time the interpreter, not the pipeline), and both
+    are timed on the same numpy-in -> numpy-out contract a receiver sees
+    (the single shot pays its host<->device staging too). The streaming
+    rows include all host-side chunking/framing plus the flush, so beating
+    single-shot means the double-buffered dispatch more than hides the
+    chunk bookkeeping (acceptance: streaming >= single-shot here).
+    """
+    from repro.core import DecoderConfig, make_decoder
+    from repro.core.stream import make_stream_decoder
+    rng = np.random.default_rng(0)
+    spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
+    nframes = 512 if full else 128
+    n = nframes * spec.f
+    llr = rng.standard_normal((n, 2)).astype(np.float32)
+    cfg = DecoderConfig(spec=spec)
+    rows = []
+
+    dec = make_decoder(cfg)
+    np.asarray(dec(llr, n))                            # compile + warm
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        np.asarray(dec(llr, n))
+        best = min(best, time.perf_counter() - t0)
+    rows.append({"table": "streaming", "variant": "single_shot",
+                 "n_bits": n, "chunk_frames": nframes, "reps": 3,
+                 "us_per_call": best * 1e6, "mbps": n / best / 1e6})
+
+    for chunk in (16, 32):
+        sdec = make_stream_decoder(cfg, chunk_frames=chunk)
+
+        def run_stream():
+            out = [sdec.push(llr[i:i + chunk * spec.f])
+                   for i in range(0, n, chunk * spec.f)]
+            out.append(sdec.flush())
+            return sum(o.size for o in out)
+
+        assert run_stream() == n                   # warm every chunk shape
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            nbits = run_stream()
+            best = min(best, time.perf_counter() - t0)
+            assert nbits == n
+        rows.append({"table": "streaming",
+                     "variant": f"stream_chunk{chunk}", "n_bits": n,
+                     "chunk_frames": chunk, "reps": 3,
+                     "us_per_call": best * 1e6, "mbps": n / best / 1e6})
+    return rows
+
+
+def plan_rows():
+    """Tile plans across layouts/models at the default 2 MiB budget — the
+    BENCH_kernels.json record behind the layout acceptance criterion
+    (sublane-major fits >= 2x the frames per tile of the PR-1 plan under
+    honest hardware accounting)."""
+    from repro.kernels.autotune import plan_tiles
+    spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
+    entries = [
+        ("lane_logical_pr1", dict(layout="lane", mosaic=False)),
+        ("lane_mosaic", dict(layout="lane", mosaic=True)),
+        ("sublane_mosaic", dict(layout="sublane")),
+        ("sublane_mosaic_bf16", dict(layout="sublane",
+                                     bm_dtype="bfloat16")),
+        ("split_lane_logical", dict(layout="lane", mosaic=False,
+                                    unified=False)),
+    ]
+    rows = []
+    for name, kw in entries:
+        p = plan_tiles(STD_K7, spec, pack_survivors=True, radix=4, **kw)
+        rows.append({"table": "plans", "plan": name,
+                     "kernel": p.kernel, "layout": p.layout.value,
+                     "bm_dtype": p.bm_dtype, "mosaic": p.mosaic,
+                     "ft": p.frames_per_tile,
+                     "vmem_kib": round(p.vmem_bytes / 1024, 1),
+                     "budget_kib": round(p.budget / 1024, 1),
+                     "fits": p.vmem_bytes <= p.budget})
     return rows
 
 

@@ -1,0 +1,54 @@
+"""Per-PR trajectory store for BENCH_kernels.json.
+
+The kernel sweep used to overwrite the file each run; the benchmark-
+regression gate (scripts/bench_gate.py) needs the history, so the file is
+now a list of runs:
+
+    {"schema": "kernel_sweep/v2", "runs": [run0, run1, ...]}
+
+where each run holds the sweep rows plus the streaming and tile-plan
+sections. A v1 file (single {"rows": ...} dict) is absorbed as the first
+run so the PR-1 datapoint stays in the trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+SCHEMA = "kernel_sweep/v2"
+DEFAULT_PATH = "BENCH_kernels.json"
+
+__all__ = ["SCHEMA", "DEFAULT_PATH", "load_runs", "append_run", "best_mbps"]
+
+
+def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
+    """Existing runs, oldest first ([] when the file is absent)."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        data = json.load(fh)
+    if data.get("schema") == SCHEMA:
+        return data["runs"]
+    # v1: one run, {"schema": "kernel_sweep/v1", "full":..., "rows":[...]}
+    return [{"full": data.get("full", False), "rows": data.get("rows", []),
+             "schema_origin": data.get("schema", "v1")}]
+
+
+def append_run(run: dict, path: str = DEFAULT_PATH) -> list[dict]:
+    """Append ``run`` to the trajectory and rewrite ``path``."""
+    runs = load_runs(path)
+    runs.append(run)
+    with open(path, "w") as fh:
+        json.dump({"schema": SCHEMA, "runs": runs}, fh, indent=1,
+                  sort_keys=True)
+        fh.write("\n")
+    return runs
+
+
+def best_mbps(run: dict) -> float:
+    """Best kernel-sweep throughput of a run (the regression-gate metric).
+
+    Only rows with comparable workload metadata should be compared across
+    runs; the gate checks ``full`` and ``n_bits`` before trusting this.
+    """
+    return max((r["mbps"] for r in run.get("rows", [])), default=0.0)

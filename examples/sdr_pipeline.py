@@ -1,7 +1,12 @@
 """SDR receiver pipeline: punctured rate-3/4 stream -> depuncture ->
-framed decode (parallel traceback) -> BER, plus a sharded multi-device
-variant of the same decode (frames are the parallel axis — the paper's
-tiling is also the distribution strategy).
+framed decode (parallel traceback) -> BER, plus the STREAMING front-end:
+the same stream pushed chunk-by-chunk (as a real receiver would) through
+core.stream's double-buffered decoder, frame-sharded over every local
+device (the paper's tiling is also the distribution strategy).
+
+All decode paths use DecoderConfig's library defaults (bit-packed
+survivors, radix-4 ACS, autotuned tiles for the kernel backends) — no
+hand-rolled seed-era knob sets.
 
 PYTHONPATH=src python examples/sdr_pipeline.py
 """
@@ -10,12 +15,12 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import FrameSpec, STD_K7, encode
-from repro.core.framed import frame_llr, decode_frame
 from repro.core.pipeline import DecoderConfig, make_decoder
 from repro.core.puncture import puncture, depuncture
+from repro.core.stream import make_stream_decoder
+from repro.distributed.stream import frame_mesh
 from repro.channel.sim import awgn, ber, bpsk
 
 n = 99_999
@@ -28,29 +33,25 @@ print(f"tx: {n} info bits -> {tx.shape[0]} channel symbols (rate {rate})")
 rx = awgn(jax.random.PRNGKey(1), tx, 6.0)
 
 spec = FrameSpec(f=252, v1=21, v2=45, f0=42, v2s=45)
-dec = make_decoder(DecoderConfig(spec=spec, rate=rate))
+cfg = DecoderConfig(spec=spec, rate=rate)
+dec = make_decoder(cfg)
 out = dec(rx, n)
 print(f"punctured {rate} BER @ 6 dB: {float(ber(out, bits)):.2e}")
 
-# ---- distributed decode: shard the FRAME axis over every local device ----
-mesh = Mesh(np.array(jax.devices()), ("frames",))
-llr = depuncture(rx, rate, n)
-frames = frame_llr(llr, spec)
-fsh = NamedSharding(mesh, P("frames", None, None))
-
-
-@jax.jit
-def decode_sharded(frames):
-    return jax.vmap(lambda fr: decode_frame(fr, STD_K7, spec))(frames)
-
-
-with mesh:
-    frames = jax.device_put(frames, fsh)
-    t0 = time.perf_counter()
-    bits_out = decode_sharded(frames)
-    bits_out.block_until_ready()
-    dt = time.perf_counter() - t0
-out2 = bits_out.reshape(-1)[:n]
-print(f"sharded decode over {mesh.devices.size} device(s): "
-      f"{n/dt/1e6:.2f} Mb/s, BER {float(ber(out2, bits)):.2e}")
-assert jnp.array_equal(out, out2)
+# ---- streaming decode, frame-sharded over every local device ------------
+# Depuncture once (pattern alignment is stream-global), then push the LLR
+# stream in receiver-sized slices; chunks are dispatched asynchronously
+# (double-buffered) and each chunk's frames are tiled across the mesh.
+mesh = frame_mesh()
+llr = np.asarray(depuncture(rx, rate, n))
+sdec = make_stream_decoder(cfg, mesh=mesh)
+push = 16 * spec.f                                   # stages per push
+t0 = time.perf_counter()
+parts = [sdec.push(llr[i:i + push]) for i in range(0, n, push)]
+parts.append(sdec.flush())
+out2 = np.concatenate(parts)[:n]
+dt = time.perf_counter() - t0
+print(f"streamed decode over {mesh.devices.size} device(s), "
+      f"chunk={sdec.chunk_frames} frames: {n/dt/1e6:.2f} Mb/s, "
+      f"BER {float(ber(jnp.asarray(out2), bits)):.2e}")
+assert np.array_equal(np.asarray(out), out2)         # bit-identical paths

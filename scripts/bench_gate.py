@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate (scripts/ci.sh).
+
+Runs the interpret-mode kernel sweep + streaming bench + tile-plan report,
+APPENDS the run to BENCH_kernels.json (keeping the per-PR trajectory), and
+fails when the best kernel configuration regresses more than
+``BENCH_GATE_TOL`` (default 20%) against the best comparable run already
+stored. Timing is min-of-reps, which absorbs most shared-runner noise; the
+tolerance absorbs the rest.
+
+  PYTHONPATH=src python scripts/bench_gate.py
+
+Env knobs: BENCH_GATE_TOL=0.2 (fractional regression allowed),
+BENCH_PATH=BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> int:
+    from benchmarks import throughput
+    from benchmarks.trajectory import (DEFAULT_PATH, append_run, best_mbps,
+                                       load_runs)
+
+    tol = float(os.environ.get("BENCH_GATE_TOL", "0.2"))
+    path = os.environ.get("BENCH_PATH", DEFAULT_PATH)
+
+    rows = throughput.kernel_sweep(full=False)
+    stream_rows = throughput.streaming_bench(full=False)
+    plans = throughput.plan_rows()
+    run = {"full": False, "rows": rows, "streaming": stream_rows,
+           "plans": plans, "gate": True}
+    cur = best_mbps(run)
+    n_bits = rows[0]["n_bits"]
+
+    prior = load_runs(path)
+    # only compare runs of the same workload size (full flag + n_bits)
+    comparable = [best_mbps(r) for r in prior
+                  if not r.get("full")
+                  and all(row.get("n_bits") == n_bits
+                          for row in r.get("rows", []))]
+    append_run(run, path)
+
+    single = next(r for r in stream_rows if r["variant"] == "single_shot")
+    beststream = max((r["mbps"] for r in stream_rows
+                      if r["variant"] != "single_shot"), default=0.0)
+    print(f"bench gate: best kernel config {cur:.2f} Mb/s; streaming best "
+          f"{beststream:.2f} vs single-shot {single['mbps']:.2f} Mb/s")
+    if not comparable:
+        print("bench gate: no comparable stored baseline — recorded only")
+        return 0
+    base = max(comparable)
+    floor = (1.0 - tol) * base
+    print(f"bench gate: stored baseline best {base:.2f} Mb/s "
+          f"(floor {floor:.2f}, tol {tol:.0%})")
+    if cur < floor:
+        print(f"bench gate: FAIL — best config regressed "
+              f"{(1 - cur / base):.0%} (> {tol:.0%}) vs stored baseline")
+        return 1
+    print("bench gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

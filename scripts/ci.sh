@@ -1,16 +1,28 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + a ~30 s interpret-mode kernel smoke bench.
+# CI gate: lint + tier-1 test suite + a ~30 s interpret-mode kernel smoke
+# bench + the benchmark-regression gate.
 #
 #   bash scripts/ci.sh           # what .github/workflows/ci.yml runs
 #
 # The smoke bench decodes real noisy frames with the seed kernel config and
 # the optimized one (packed survivors, radix-4, autotuned tiles), asserts
 # they are bit-identical to the pure-JAX oracle, and fails if the optimized
-# path regresses to slower than the seed path. Full sweeps live in
-# `python -m benchmarks.run --only kernels` (writes BENCH_kernels.json).
+# path regresses to slower than the seed path. scripts/bench_gate.py then
+# runs the full sweep, APPENDS it to BENCH_kernels.json (per-PR trajectory)
+# and fails on a >20% regression of the best config vs the stored baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+# ---- lint: a bare fori_loop/scan/while_loop at statement level discards
+# its carry — inside Pallas kernels the loop only survives because of ref-
+# write effects, and a DCE change would silently drop it (the radix-2
+# traceback did exactly this until PR 4). Assign the result.
+if grep -RnE '^[[:space:]]*(jax\.)?lax\.(fori_loop|while_loop|scan)\(' \
+        src benchmarks examples; then
+    echo "LINT: unused loop result (assign the carry of fori_loop/scan)" >&2
+    exit 1
+fi
 
 python -m pytest -x -q
 
@@ -43,10 +55,11 @@ def bench(label, **kw):
     print(f"smoke {label}: {dt*1e3:.1f} ms  (bit-exact)")
     return dt
 
-seed = bench("seed    (unpacked, radix-2, ft=8)",
-             pack_survivors=False, radix=2, frames_per_tile=8)
-opt = bench("optimized (packed, radix-4, auto)",
-            pack_survivors=True, radix=4, frames_per_tile="auto")
+seed = bench("seed    (unpacked, radix-2, ft=8, lane)",
+             pack_survivors=False, radix=2, frames_per_tile=8, layout="lane")
+opt = bench("optimized (packed, radix-4, auto, sublane)",
+            pack_survivors=True, radix=4, frames_per_tile="auto",
+            layout="sublane")
 # bit-exactness above is the hard gate; shared-runner wall clock is too
 # noisy (seed config varies ~1.7x run-to-run) for a tight perf assert, so
 # only fail on a gross regression and warn otherwise.
@@ -57,3 +70,5 @@ if opt >= seed:
 assert opt < 3.0 * seed, f"gross perf regression: {opt:.3f}s vs {seed:.3f}s"
 print("SMOKE_OK")
 EOF
+
+python scripts/bench_gate.py

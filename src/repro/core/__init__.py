@@ -5,4 +5,5 @@ from .decoder import viterbi_decode, viterbi_forward, viterbi_traceback  # noqa:
 from .framed import FrameSpec, framed_decode                   # noqa: F401
 from .traceback import serial_traceback, parallel_traceback    # noqa: F401
 from .puncture import puncture, depuncture, PATTERNS           # noqa: F401
-from .pipeline import DecoderConfig, make_decoder              # noqa: F401
+from .pipeline import DecoderConfig, make_decoder, make_frame_decoder  # noqa: F401
+from .stream import StreamDecoder, make_stream_decoder, stream_decode  # noqa: F401

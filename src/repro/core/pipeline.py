@@ -2,7 +2,10 @@
 
 depuncture -> frame -> unified decode (Pallas kernel or pure-JAX reference)
 -> stitch. This is the composable module the rest of the framework (examples,
-benchmarks, multi-pod launch) calls.
+benchmarks, multi-pod launch, the streaming front-end in core/stream.py)
+calls. ``make_frame_decoder`` exposes the frames->bits core so front-ends
+that do their own framing (chunked streams, sharded decode) share one
+backend dispatch.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ from .framed import FrameSpec, framed_decode, frame_llr, decode_frame
 from .puncture import depuncture, check_alignment
 from .trellis import Trellis, STD_K7
 
-__all__ = ["DecoderConfig", "make_decoder"]
+__all__ = ["DecoderConfig", "make_decoder", "make_frame_decoder"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +32,14 @@ class DecoderConfig:
     bit-identical to the reference backend, so these are pure perf knobs
     (set radix=2, pack_survivors=False, frames_per_tile=8 for the seed
     kernel behavior).
+
+    ``layout`` picks the survivor-memory orientation ('lane' = frames on
+    sublanes, the interpret-mode layout; 'sublane' = frames on lanes, the
+    Mosaic-native layout whose packing survives hardware lane padding) —
+    still bit-exact. ``bm_dtype='bfloat16'`` stores branch metrics
+    compressed with float32 path-metric accumulation: the one knob that is
+    NOT bit-exact, but BER-neutral to within 1e-3 at Eb/N0 >= 2 dB
+    (tests/test_ber.py gates it).
     """
     trellis: Trellis = STD_K7
     spec: FrameSpec = FrameSpec()
@@ -38,32 +49,52 @@ class DecoderConfig:
     pack_survivors: bool = True    # bit-pack survivors 32x (kernel backends)
     radix: int = 4                 # 2 | 4 trellis stages per ACS step
     frames_per_tile: int | str = "auto"   # tile size, or VMEM-planned
+    layout: str = "lane"           # 'lane' | 'sublane' survivor layout
+    bm_dtype: str = "float32"      # 'float32' | 'bfloat16' branch metrics
 
     def __post_init__(self):
         if self.rate != "1/2":
             check_alignment(self.spec.f, self.spec.v1, self.spec.v2, self.rate)
         if self.radix not in (2, 4):
             raise ValueError(f"radix must be 2 or 4, got {self.radix}")
+        if self.layout not in ("lane", "sublane"):
+            raise ValueError(f"layout must be 'lane' or 'sublane', "
+                             f"got {self.layout!r}")
+        if self.bm_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"bm_dtype must be 'float32' or 'bfloat16', "
+                             f"got {self.bm_dtype!r}")
 
 
-def make_decoder(cfg: DecoderConfig):
-    """Returns decode(llr_or_stream, n) -> (n,) bits, jitted."""
+def make_frame_decoder(cfg: DecoderConfig):
+    """Returns decode_frames(frames (F, L, beta)) -> (F, f) bits.
 
+    The backend-dispatch core shared by make_decoder, the streaming
+    front-end (core/stream.py) and the sharded decoder (distributed/
+    stream.py). Not jitted here — callers jit the enclosing computation.
+    """
     if cfg.backend == "reference":
-        def _decode_frames(frames):
-            return jax.vmap(lambda fr: decode_frame(fr, cfg.trellis, cfg.spec))(frames)
+        def decode_frames(frames):
+            return jax.vmap(
+                lambda fr: decode_frame(fr, cfg.trellis, cfg.spec))(frames)
     elif cfg.backend in ("kernel", "kernel_split"):
         from ..kernels import ops as kops
         unified = cfg.backend == "kernel"
 
-        def _decode_frames(frames):
+        def decode_frames(frames):
             return kops.viterbi_decode_frames(
                 frames, cfg.trellis, cfg.spec, unified=unified,
                 frames_per_tile=cfg.frames_per_tile,
                 pack_survivors=cfg.pack_survivors, radix=cfg.radix,
+                layout=cfg.layout, bm_dtype=cfg.bm_dtype,
                 interpret=cfg.interpret)
     else:
         raise ValueError(cfg.backend)
+    return decode_frames
+
+
+def make_decoder(cfg: DecoderConfig):
+    """Returns decode(llr_or_stream, n) -> (n,) bits, jitted."""
+    _decode_frames = make_frame_decoder(cfg)
 
     @partial(jax.jit, static_argnums=(1,))
     def decode(stream: jax.Array, n: int) -> jax.Array:

@@ -1,0 +1,198 @@
+"""Streaming decode front-end: unbounded LLR streams, chunk by chunk.
+
+``viterbi_decode_frames`` and ``make_decoder`` are single-shot: they want
+the whole stream in memory, framed, before the first kernel launches. A
+receiver does not work like that — samples arrive forever. This module
+chunks an unbounded (n, beta) LLR stream into frame batches, keeps the
+v1/v2 overlap context across chunk boundaries (so the chunked decode is
+BIT-IDENTICAL to the single-shot framed decode of the same stream), and
+double-buffers the per-chunk kernel dispatch:
+
+  * chunk i is dispatched through JAX's async runtime and NOT waited on;
+  * the host immediately frames chunk i+1 while the device decodes i;
+  * results are materialized one chunk behind the dispatch front, so a
+    ``block_until_ready`` never sits between two kernel launches.
+
+Geometry: a chunk covers ``chunk_frames * spec.f`` kept stages; the decode
+window around it is ``[start - v1, end + v2)``. The rolling buffer always
+retains the v1 left-context samples of the NEXT chunk, the flush pads the
+final partial chunk with zero LLRs (neutral, exactly like frame_llr's edge
+padding), and the stream start is zero-padded the same way — hence the
+bit-exact equivalence with ``framed_decode``.
+
+The chunk size and kernel configuration come from one
+``kernels.autotune.plan_decode`` plan (the "full plan the front-end
+executes"): tiles from the per-device VMEM budget, chunks as a multiple of
+tiles x devices so a sharded decode (distributed/stream.py) keeps every
+device busy every chunk.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .pipeline import DecoderConfig, make_frame_decoder
+
+__all__ = ["StreamDecoder", "make_stream_decoder", "stream_decode"]
+
+
+class StreamDecoder:
+    """Incremental decoder: ``push`` LLR samples, collect decoded bits.
+
+    push() returns the bits whose chunks have *completed* (possibly an
+    empty array — results trail the dispatch front by ``depth`` chunks);
+    flush() decodes the zero-padded tail and drains everything pending.
+    The instance is reusable after flush(). Feed depunctured (m, beta)
+    soft symbols (for punctured rates, depuncture before pushing — the
+    pattern alignment is stream-global, not per-chunk).
+    """
+
+    def __init__(self, cfg: DecoderConfig, decode_frames, chunk_frames: int,
+                 depth: int = 1):
+        assert chunk_frames > 0 and depth >= 0
+        self.cfg = cfg
+        self.spec = cfg.spec
+        self.beta = cfg.trellis.beta
+        self.chunk_frames = chunk_frames
+        self.depth = depth                      # chunks left in flight
+        self._decode_frames = decode_frames
+        self._decoders = {}                     # nframes -> jitted window fn
+        self._reset()
+
+    def _reset(self):
+        v1 = self.spec.v1
+        # the buffer holds [next_chunk_start - v1, ...); the stream start
+        # gets the same zero left-context frame_llr would pad with
+        self._buf = np.zeros((v1, self.beta), np.float32)
+        self._inflight = collections.deque()    # (device_array, n_bits)
+        self._n_in = 0                          # stages pushed
+        self._n_disp = 0                        # bits dispatched
+
+    def _window_decoder(self, nframes: int):
+        """Jitted window -> bits for a chunk of ``nframes`` frames (cached
+        per length on the instance: every full chunk shares one
+        compilation; flush tails compile once per distinct tail length)."""
+        if nframes in self._decoders:
+            return self._decoders[nframes]
+        spec = self.spec
+        L, f = spec.frame_len, spec.f
+        decode_frames = self._decode_frames
+
+        @jax.jit
+        def run(window):                        # (v1 + nframes*f + v2, beta)
+            starts = jnp.arange(nframes) * f
+            idx = starts[:, None] + jnp.arange(L)[None, :]
+            frames = window[idx]                # (nframes, L, beta)
+            return decode_frames(frames).reshape(-1)
+
+        self._decoders[nframes] = run
+        return run
+
+    def _dispatch(self, window: np.ndarray, nframes: int, n_bits: int):
+        bits = self._window_decoder(nframes)(jnp.asarray(window))
+        self._inflight.append((bits, n_bits))
+        self._n_disp += n_bits
+
+    def _drain(self, leave: int) -> list[np.ndarray]:
+        out = []
+        while len(self._inflight) > leave:
+            bits, n_bits = self._inflight.popleft()
+            out.append(np.asarray(bits)[:n_bits])   # blocks on OLDEST only
+        return out
+
+    def push(self, llr) -> np.ndarray:
+        """Feed (m, beta) (or flat (m*beta,)) soft symbols; returns the
+        decoded bits of every chunk that has completed so far."""
+        llr = np.asarray(llr, np.float32).reshape(-1, self.beta)
+        self._n_in += llr.shape[0]
+        self._buf = np.concatenate([self._buf, llr]) if llr.size \
+            else self._buf
+        spec, C = self.spec, self.chunk_frames
+        ck = C * spec.f                          # kept stages per chunk
+        need = spec.v1 + ck + spec.v2            # full decode window
+        out = []
+        while self._buf.shape[0] >= need:
+            self._dispatch(self._buf[:need], C, ck)
+            self._buf = self._buf[ck:]           # keep next chunk's v1 lead
+            out.extend(self._drain(self.depth))
+        return (np.concatenate(out) if out
+                else np.zeros((0,), np.int32))
+
+    def flush(self) -> np.ndarray:
+        """Decode the zero-padded tail, drain all in-flight chunks, and
+        reset for the next stream. Returns the remaining decoded bits."""
+        spec = self.spec
+        tail = self._n_in - self._n_disp         # stages not yet dispatched
+        if tail > 0:
+            nframes = -(-tail // spec.f)
+            need = spec.v1 + nframes * spec.f + spec.v2
+            window = self._buf
+            if window.shape[0] < need:           # frame_llr's edge padding
+                pad = np.zeros((need - window.shape[0], self.beta),
+                               np.float32)
+                window = np.concatenate([window, pad])
+            self._dispatch(window[:need], nframes, tail)
+        out = self._drain(0)
+        self._reset()
+        return (np.concatenate(out) if out
+                else np.zeros((0,), np.int32))
+
+
+def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
+                        mesh=None, depth: int = 1) -> StreamDecoder:
+    """Build a StreamDecoder for ``cfg``.
+
+    chunk_frames: frames per chunk; default comes from
+      kernels.autotune.plan_decode — two kernel tiles per device, so the
+      dispatch pipeline and (if ``mesh`` is given) every device stay busy.
+    mesh: optional jax Mesh with a 'frames' axis; chunks are then decoded
+      with the sharded frame decoder (distributed/stream.py), frames tiled
+      across the mesh devices.
+    depth: chunks allowed in flight behind the dispatch front (1 = classic
+      double buffering; 0 = synchronous, for debugging).
+    """
+    num_devices = int(mesh.devices.size) if mesh is not None else 1
+    if chunk_frames is None:
+        from ..kernels.autotune import plan_decode
+        plan = plan_decode(
+            cfg.trellis, cfg.spec, unified=cfg.backend != "kernel_split",
+            pack_survivors=cfg.pack_survivors, radix=cfg.radix,
+            bm_dtype=cfg.bm_dtype, layout=cfg.layout,
+            num_devices=num_devices)
+        chunk_frames = plan.chunk_frames
+    if mesh is not None:
+        from ..distributed.stream import make_sharded_frame_decoder
+        decode_frames = make_sharded_frame_decoder(cfg, mesh)
+    else:
+        decode_frames = make_frame_decoder(cfg)
+    return StreamDecoder(cfg, decode_frames, chunk_frames, depth)
+
+
+def stream_decode(cfg: DecoderConfig, llr, n: int | None = None, *,
+                  chunk_frames: int | None = None, mesh=None,
+                  push_size: int | None = None) -> np.ndarray:
+    """Convenience one-call wrapper: stream ``llr`` through a
+    StreamDecoder in ``push_size``-stage pushes and return the first n
+    bits — bit-identical to ``make_decoder(cfg)(llr, n)``. Like
+    make_decoder, a punctured-rate cfg takes the punctured symbol stream
+    (and needs ``n``); it is depunctured up front because the pattern
+    alignment is stream-global."""
+    llr = np.asarray(llr, np.float32)
+    if cfg.rate != "1/2":
+        if n is None:
+            raise ValueError("n is required for punctured rates")
+        from .puncture import depuncture
+        llr = np.asarray(depuncture(jnp.asarray(llr.reshape(-1)),
+                                    cfg.rate, n))
+    if n is None:
+        n = llr.shape[0]
+    dec = make_stream_decoder(cfg, chunk_frames=chunk_frames, mesh=mesh)
+    if push_size is None:
+        push_size = max(1, dec.chunk_frames) * cfg.spec.f
+    parts = [dec.push(llr[i:i + push_size])
+             for i in range(0, llr.shape[0], push_size)]
+    parts.append(dec.flush())
+    return np.concatenate(parts)[:n]

@@ -1,3 +1,25 @@
 """Pallas TPU kernels for the paper's compute hot-spot (validated with
-interpret=True on CPU; see EXAMPLE.md for the layout convention)."""
-from . import ops, ref  # noqa: F401
+interpret=True on CPU; see EXAMPLE.md for the layout convention).
+
+Submodules (``ops``, ``ref``, ``autotune``, ``packing``, ...) are imported
+on first use rather than eagerly: ``core.traceback`` consumes the layout
+vocabulary of ``kernels.packing``, and an eager ``from . import ops`` here
+would re-enter ``repro.core`` mid-import — kernels.packing depends on
+nothing, everything above it may depend on it. Attribute access
+(``repro.kernels.ops``) and ``from repro.kernels import ops`` both work;
+the module __getattr__ below resolves them on demand.
+"""
+import importlib
+
+_SUBMODULES = ("acs", "autotune", "ops", "packing", "ref", "tables",
+               "viterbi_fwd", "viterbi_unified")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

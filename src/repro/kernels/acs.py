@@ -7,34 +7,61 @@ scratch vs HBM stream). ``acs_scan`` factors that recursion into one
 place, parameterized by a ``store(t, sel, sigma)`` callback, so a change
 to the tie-break / normalization / radix-4 pair ordering cannot drift
 between the two kernels and silently break their bit-exactness.
+
+Layouts (kernels/packing.Layout):
+  * LANE    — the PR-1 orientation: working arrays are (FT, S), frames on
+    sublanes, states on lanes; bm scratch is (L, FT, half).
+  * SUBLANE — Mosaic-native: the whole recursion runs transposed, (S, FT)
+    with frames on lanes, and the bm scratch is the FLAT 2D array
+    (L * half, FT) — flattening stages into the sublane axis avoids the
+    8-sublane padding a (L, half, FT) scratch would pay on the tiny
+    ``half`` dim. Stage t lives at rows [t*half, (t+1)*half). Both
+    orientations perform the identical arithmetic sequence (elementwise
+    adds/selects, exact max reductions, same gather tables), so they are
+    bit-identical for float32 branch metrics.
+
+``bm_dtype`` sets the *storage* dtype of the compressed branch metrics
+(eq. 9): float32, or bfloat16 to halve the second-largest VMEM term. Path
+metrics always accumulate in float32 — BMs are rounded once on store and
+cast back up before the add, so bf16 costs one quantization of the inputs,
+not a lossy recursion (tests/test_ber.py bounds the BER delta).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from ..core.trellis import Trellis
+from .packing import Layout
 from .tables import kernel_tables, radix4_tables
 
 __all__ = ["acs_scan"]
 
 
-def acs_scan(llr_ref, bm_ref, *, trellis: Trellis, L: int, radix: int, store):
+def acs_scan(llr_ref, bm_ref, *, trellis: Trellis, L: int, radix: int, store,
+             layout: Layout = Layout.LANE, bm_dtype=jnp.float32):
     """Branch metrics + ACS over all L stages; returns the final sigma.
 
-    llr_ref: (FT, L, beta) kernel input ref.
-    bm_ref:  (L, FT, 2^(beta-1)) VMEM scratch, filled with the
-             symmetry-compressed branch metrics (paper Fig. 7 / eq. 9).
+    llr_ref: (FT, L, beta) kernel input ref, or the flattened (FT, L*beta)
+             block the SUBLANE layout uses (lane-padding-friendly).
+    bm_ref:  VMEM scratch for the symmetry-compressed branch metrics
+             (paper Fig. 7 / eq. 9): (L, FT, half) for LANE, flat
+             (L*half, FT) for SUBLANE; dtype ``bm_dtype``.
     store:   callback invoked once per stage, in stage order, with
-             (t, sel (FT, S) bool, sigma (FT, S) normalized) — writes the
-             survivors wherever the calling kernel keeps them.
+             (t, sel, sigma) — sel/sigma are (FT, S) in LANE orientation
+             and (S, FT) in SUBLANE orientation; writes the survivors
+             wherever the calling kernel keeps them.
 
     radix=4 fuses two stages per scan step via the fused BM indexing of
     ``radix4_tables`` — half the trip count, bit-identical arithmetic
     (each half-step is the exact radix-2 sequence incl. normalization).
     """
     S = trellis.num_states
+    beta = trellis.beta
+    half = 1 << (beta - 1)
     FT = llr_ref.shape[0]
+    sub = Layout(layout) is Layout.SUBLANE
     if radix == 4:
         perm, idx2, sgn2, signs_half = radix4_tables(trellis)
     else:
@@ -42,37 +69,55 @@ def acs_scan(llr_ref, bm_ref, *, trellis: Trellis, L: int, radix: int, store):
         idx2, sgn2 = [idx_p], [sgn_p]
 
     # coalesced, symmetry-compressed branch metrics into VMEM
-    llr = llr_ref[...].astype(jnp.float32)           # (FT, L, beta)
-    bm_ref[...] = jnp.einsum("flb,hb->lfh", llr, signs_half)
+    llr = llr_ref[...].astype(jnp.float32)
+    if llr.ndim == 2:                                # SUBLANE flat block
+        llr = llr.reshape(FT, L, beta)
+    if sub:
+        bm = jnp.einsum("flb,hb->lhf", llr, signs_half)   # (L, half, FT)
+        bm_ref[...] = bm.reshape(L * half, FT).astype(bm_dtype)
+        bmrow = lambda t, k=1: bm_ref[pl.ds(t * half, k * half)]
+    else:
+        bm_ref[...] = jnp.einsum("flb,hb->lfh", llr,
+                                 signs_half).astype(bm_dtype)
+        bmrow = lambda t, k=1: (bm_ref[t] if k == 1 else
+                                jnp.concatenate([bm_ref[t], bm_ref[t + 1]],
+                                                axis=1))
 
-    def acs_half(sigma, bmrow, st):                  # one radix-2 half-step
+    def acs_half(sigma, bmr, st):                    # one radix-2 half-step
         cand = []
         for p in (0, 1):
-            s_prev = jnp.take(sigma, perm[p], axis=1)              # (FT, S)
-            bm = jnp.take(bmrow, idx2[st][p], axis=1) * sgn2[st][p]
+            if sub:                                  # states on sublanes
+                s_prev = jnp.take(sigma, perm[p], axis=0)          # (S, FT)
+                bm = (jnp.take(bmr, idx2[st][p], axis=0)
+                      .astype(jnp.float32) * sgn2[st][p][:, None])
+            else:                                    # states on lanes
+                s_prev = jnp.take(sigma, perm[p], axis=1)          # (FT, S)
+                bm = (jnp.take(bmr, idx2[st][p], axis=1)
+                      .astype(jnp.float32) * sgn2[st][p])
             cand.append(s_prev + bm)
         sel = (cand[1] >= cand[0])                   # ties -> i'' (Alg. 1)
         sigma = jnp.where(sel, cand[1], cand[0])
-        sigma = sigma - jnp.max(sigma, axis=1, keepdims=True)      # normalize
+        sigma = sigma - jnp.max(sigma, axis=0 if sub else 1,
+                                keepdims=True)       # normalize
         return sigma, sel
 
-    sigma0 = jnp.zeros((FT, S), jnp.float32)
+    sigma0 = jnp.zeros((S, FT) if sub else (FT, S), jnp.float32)
     if radix == 4:
         def acs_pair(t2, sigma):
             t = 2 * t2
-            bm2 = jnp.concatenate([bm_ref[t], bm_ref[t + 1]], axis=1)
+            bm2 = bmrow(t, 2)             # both stages' rows, fused indexing
             for st in (0, 1):                        # exact radix-2 order
                 sigma, sel = acs_half(sigma, bm2, st)
                 store(t + st, sel, sigma)
             return sigma
         sigma = jax.lax.fori_loop(0, L // 2, acs_pair, sigma0)
         if L % 2:                                    # odd-length tail stage
-            sigma, sel = acs_half(sigma, bm_ref[L - 1], 0)
+            sigma, sel = acs_half(sigma, bmrow(L - 1), 0)
             store(L - 1, sel, sigma)
         return sigma
 
     def acs_step(t, sigma):
-        sigma, sel = acs_half(sigma, bm_ref[t], 0)
+        sigma, sel = acs_half(sigma, bmrow(t), 0)
         store(t, sel, sigma)
         return sigma
     return jax.lax.fori_loop(0, L, acs_step, sigma0)

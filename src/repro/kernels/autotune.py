@@ -9,27 +9,70 @@ frames per tile amortizes the fixed per-step scan overhead and gives
 Mosaic a longer-lived block to pipeline DMA against (paper §IV-F,
 "multiple frames per block").
 
-``plan_tiles`` picks the largest power-of-two tile whose unified-kernel
-footprint fits a conservative budget (default 2 MiB of the ~16 MiB VMEM:
-leaves room for double-buffered LLR DMA and concurrent tiles), after
-validating the FrameSpec's subframe geometry. With packed survivors the
-dominant array shrinks 32x, which is what moves the plan from FT=8-16 to
-FT>=32 — the acceptance target of this optimization.
+Two accounting models:
+
+* **logical** bytes — element counts x itemsize. This is what the scratch
+  *specs* declare, what interpret mode allocates, and the honest budget
+  for the GPU shared-memory target the paper describes.
+* **mosaic** bytes (``mosaic_padded_bytes``) — what a real TPU allocates:
+  the trailing dim of every >=2D array is padded to 128 lanes and the
+  second-to-last to 32/itemsize sublanes. Under this model the lane
+  layout's packed ``(.., W=2)`` survivors balloon 64x, which is exactly
+  why the sublane layout (frames on lanes, flat stage-major scratches)
+  exists — see viterbi_unified.py's budget table.
+
+``plan_tiles`` picks the largest power-of-two tile whose footprint fits a
+conservative budget (default 2 MiB of the ~16 MiB VMEM: leaves room for
+double-buffered LLR DMA and concurrent tiles), for either kernel
+(``unified=False`` uses the split kernel's smaller per-step footprint),
+either layout, and either branch-metric dtype. ``plan_decode`` goes one
+step further and returns the FULL plan the decode front-end executes —
+kernel, layout (``'auto'`` compares both under mosaic accounting), tile,
+and the per-chunk frame count the streaming front-end (core/stream.py)
+feeds each device.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from ..core.framed import FrameSpec
 from ..core.trellis import Trellis
-from .packing import packed_width
+from .packing import Layout, packed_width
 
-__all__ = ["TilePlan", "unified_vmem_bytes", "plan_tiles",
-           "DEFAULT_VMEM_BUDGET", "CANDIDATE_TILES"]
+__all__ = ["TilePlan", "DecodePlan", "mosaic_padded_bytes",
+           "unified_vmem_bytes", "split_vmem_bytes", "plan_tiles",
+           "plan_decode", "DEFAULT_VMEM_BUDGET", "CANDIDATE_TILES"]
 # (subframe-geometry validation lives on FrameSpec.validate itself)
 
 DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024          # bytes, per grid step
 CANDIDATE_TILES = (8, 16, 32, 64, 128, 256)    # powers of two >= 1 sublane
+
+_BM_ITEMSIZE = {"float32": 4, "bfloat16": 2}
+
+
+def _rup(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def mosaic_padded_bytes(shape: tuple, itemsize: int) -> int:
+    """Bytes a real Mosaic allocation pays for ``shape``: last dim padded
+    to 128 lanes, second-to-last to the dtype's sublane count (8 for 4-byte,
+    16 for 2-byte, 32 for 1-byte), leading dims multiply. 1D arrays pay a
+    whole minimum tile."""
+    if len(shape) == 1:
+        shape = (1,) + tuple(shape)
+    lead = math.prod(shape[:-2]) if len(shape) > 2 else 1
+    return (lead * _rup(shape[-2], 32 // itemsize) * _rup(shape[-1], 128)
+            * itemsize)
+
+
+def _bm_itemsize(bm_dtype) -> int:
+    try:
+        return _BM_ITEMSIZE[str(bm_dtype)]
+    except KeyError:
+        raise ValueError(f"bm_dtype must be one of {sorted(_BM_ITEMSIZE)}, "
+                         f"got {bm_dtype!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +82,10 @@ class TilePlan:
     vmem_bytes: int
     breakdown: tuple          # ((name, bytes), ...) for reports/debugging
     budget: int
+    kernel: str = "unified"   # 'unified' | 'split'
+    layout: Layout = Layout.LANE
+    bm_dtype: str = "float32"
+    mosaic: bool = False      # padded (hardware) or logical accounting
 
     def utilization(self) -> float:
         return self.vmem_bytes / self.budget
@@ -51,49 +98,132 @@ def _geometry(spec: FrameSpec):
     return spec.f, spec.v2
 
 
+def _shapes_unified(trellis: Trellis, spec: FrameSpec, FT: int,
+                    pack: bool, layout: Layout, bm_isz: int):
+    """((name, shape, itemsize), ...) mirroring viterbi_unified.py exactly."""
+    S = trellis.num_states
+    beta = trellis.beta
+    half = 1 << (beta - 1)
+    L = spec.frame_len
+    W = packed_width(S)
+    f0, v2s = _geometry(spec)
+    nsub = spec.f // f0
+    if layout is Layout.SUBLANE:
+        sel = (L * W, FT) if pack else (L, S, FT)
+        return (
+            ("llr_block", (FT, L * beta), 4),
+            ("bm_compressed", (L * half, FT), bm_isz),
+            ("sel_survivors", sel, 4),
+            ("amax", (L, FT), 4),
+            ("tb_bits", (f0 + v2s, nsub, FT), 4),
+            ("out_block", (FT, spec.f), 4),
+        )
+    sel_w = W if pack else S
+    return (
+        ("llr_block", (FT, L, beta), 4),
+        ("bm_compressed", (L, FT, half), bm_isz),
+        ("sel_survivors", (L, FT, sel_w), 4),
+        ("amax", (L, FT), 4),
+        ("tb_bits", (f0 + v2s, nsub, FT), 4),
+        ("out_block", (FT, spec.f), 4),
+    )
+
+
+def _shapes_split(trellis: Trellis, spec: FrameSpec, FT: int,
+                  pack: bool, layout: Layout, bm_isz: int):
+    """((name, shape, itemsize), ...) mirroring viterbi_fwd.py: the per-step
+    working set is the LLR block, the bm scratch, and the staged sel/amax
+    output blocks — no survivor scratch and no traceback arrays (those live
+    in HBM / run as a separate JAX step)."""
+    S = trellis.num_states
+    beta = trellis.beta
+    half = 1 << (beta - 1)
+    L = spec.frame_len
+    W = packed_width(S)
+    if layout is Layout.SUBLANE:
+        sel = ((L * W, FT), 4) if pack else ((L, S, FT), 1)
+        return (
+            ("llr_block", (FT, L * beta), 4),
+            ("bm_compressed", (L * half, FT), bm_isz),
+            ("sel_stream", *sel),
+            ("amax_stream", (FT, L), 4),
+        )
+    sel = ((FT, L, W), 4) if pack else ((FT, L, S), 1)
+    return (
+        ("llr_block", (FT, L, beta), 4),
+        ("bm_compressed", (L, FT, half), bm_isz),
+        ("sel_stream", *sel),
+        ("amax_stream", (FT, L), 4),
+    )
+
+
+def _footprint(shapes, mosaic: bool):
+    if mosaic:
+        breakdown = tuple((n, mosaic_padded_bytes(s, i)) for n, s, i in shapes)
+    else:
+        breakdown = tuple((n, math.prod(s) * i) for n, s, i in shapes)
+    return sum(b for _, b in breakdown), breakdown
+
+
+def _resolve(layout, mosaic):
+    layout = Layout(layout)
+    if mosaic is None:
+        # the sublane layout exists to survive hardware padding, so it is
+        # judged by it; the lane layout keeps the interpret-mode (logical)
+        # model that PR-1 plans were made with
+        mosaic = layout is Layout.SUBLANE
+    return layout, mosaic
+
+
 def unified_vmem_bytes(trellis: Trellis, spec: FrameSpec,
                        frames_per_tile: int, *, pack_survivors: bool = False,
-                       radix: int = 2):
+                       radix: int = 2, layout=Layout.LANE,
+                       bm_dtype: str = "float32", mosaic: bool | None = None):
     """(total_bytes, breakdown) of one unified-kernel grid step.
 
     Mirrors the scratch_shapes + block specs in viterbi_unified.py exactly;
     ``radix`` does not change the footprint (the fused BM row is a
     transient concatenation), it is accepted so call sites can pass the
-    full kernel config through one interface.
+    full kernel config through one interface. ``mosaic=None`` defaults to
+    padded accounting for the sublane layout, logical for lane.
     """
     del radix
-    S = trellis.num_states
-    beta = trellis.beta
-    half = 1 << (beta - 1)
-    L = spec.frame_len
-    FT = frames_per_tile
-    f0, v2s = _geometry(spec)
-    nsub = spec.f // f0
-    sel_w = packed_width(S) if pack_survivors else S
+    layout, mosaic = _resolve(layout, mosaic)
+    shapes = _shapes_unified(trellis, spec, frames_per_tile, pack_survivors,
+                             layout, _bm_itemsize(bm_dtype))
+    return _footprint(shapes, mosaic)
 
-    breakdown = (
-        ("llr_block", FT * L * beta * 4),
-        ("bm_compressed", L * FT * half * 4),
-        ("sel_survivors", L * FT * sel_w * 4),
-        ("amax", L * FT * 4),
-        ("tb_bits", (f0 + v2s) * nsub * FT * 4),
-        ("out_block", FT * spec.f * 4),
-    )
-    return sum(b for _, b in breakdown), breakdown
+
+def split_vmem_bytes(trellis: Trellis, spec: FrameSpec,
+                     frames_per_tile: int, *, pack_survivors: bool = False,
+                     radix: int = 2, layout=Layout.LANE,
+                     bm_dtype: str = "float32", mosaic: bool | None = None):
+    """(total_bytes, breakdown) of one split (forward) kernel grid step —
+    the smaller footprint plan_tiles(unified=False) budgets against."""
+    del radix
+    layout, mosaic = _resolve(layout, mosaic)
+    shapes = _shapes_split(trellis, spec, frames_per_tile, pack_survivors,
+                           layout, _bm_itemsize(bm_dtype))
+    return _footprint(shapes, mosaic)
 
 
 def plan_tiles(trellis: Trellis, spec: FrameSpec, *,
                pack_survivors: bool = False, radix: int = 2,
                vmem_budget: int = DEFAULT_VMEM_BUDGET,
-               max_frames: int | None = None) -> TilePlan:
-    """Pick frames_per_tile for the unified kernel from the VMEM budget.
+               max_frames: int | None = None, unified: bool = True,
+               layout=Layout.LANE, bm_dtype: str = "float32",
+               mosaic: bool | None = None) -> TilePlan:
+    """Pick frames_per_tile for one kernel configuration from a VMEM budget.
 
     Returns the largest candidate tile that fits ``vmem_budget``; the
     smallest candidate is returned even when over budget (the kernel still
     runs — headroom just shrinks). ``max_frames`` caps the tile near the
     actual frame count so short streams don't decode mostly padding.
+    ``unified=False`` budgets the split (forward-only) kernel's footprint.
     """
     spec.validate()
+    layout, mosaic = _resolve(layout, mosaic)
+    model = unified_vmem_bytes if unified else split_vmem_bytes
     candidates = list(CANDIDATE_TILES)
     if max_frames is not None:
         # smallest candidate covering the stream in one tile is enough
@@ -103,11 +233,73 @@ def plan_tiles(trellis: Trellis, spec: FrameSpec, *,
 
     best = None
     for ft in candidates:
-        total, breakdown = unified_vmem_bytes(
-            trellis, spec, ft, pack_survivors=pack_survivors, radix=radix)
-        plan = TilePlan(ft, total, breakdown, vmem_budget)
+        total, breakdown = model(
+            trellis, spec, ft, pack_survivors=pack_survivors, radix=radix,
+            layout=layout, bm_dtype=bm_dtype, mosaic=mosaic)
+        plan = TilePlan(ft, total, breakdown, vmem_budget,
+                        "unified" if unified else "split", layout,
+                        str(bm_dtype), mosaic)
         if total <= vmem_budget or best is None:
             best = plan
         if total > vmem_budget:
             break
     return best
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """The full configuration the decode front-end executes: kernel knobs
+    (tile) plus the streaming geometry (chunk sizing across devices)."""
+    tile: TilePlan
+    pack_survivors: bool
+    radix: int
+    chunk_frames: int         # frames the stream front-end batches per chunk
+    num_devices: int          # chunk_frames is a multiple of tiles x devices
+
+    @property
+    def unified(self) -> bool:
+        return self.tile.kernel == "unified"
+
+    @property
+    def frames_per_tile(self) -> int:
+        return self.tile.frames_per_tile
+
+    def kernel_kwargs(self) -> dict:
+        """kwargs for ops.viterbi_decode_frames, ready to splat."""
+        return dict(unified=self.unified,
+                    frames_per_tile=self.tile.frames_per_tile,
+                    pack_survivors=self.pack_survivors, radix=self.radix,
+                    layout=self.tile.layout.value,
+                    bm_dtype=self.tile.bm_dtype)
+
+
+def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
+                pack_survivors: bool = True, radix: int = 4,
+                bm_dtype: str = "float32", layout="auto",
+                vmem_budget: int = DEFAULT_VMEM_BUDGET, num_devices: int = 1,
+                chunk_frames: int | None = None,
+                max_frames: int | None = None) -> DecodePlan:
+    """Plan the whole decode: kernel, layout, tile, and chunk geometry.
+
+    ``layout='auto'`` evaluates both layouts under mosaic (hardware-padded)
+    accounting and keeps the one that fits more frames per tile at the
+    given per-device ``vmem_budget`` (ties: fewer padded bytes) — the
+    FT x S lane transpose wins only when tiles are small enough that
+    frames cannot fill the 128 lanes. ``chunk_frames`` defaults to two
+    tiles per device so the streaming front-end can double-buffer.
+    """
+    if layout == "auto":
+        plans = [plan_tiles(trellis, spec, pack_survivors=pack_survivors,
+                            radix=radix, vmem_budget=vmem_budget,
+                            max_frames=max_frames, unified=unified,
+                            layout=lay, bm_dtype=bm_dtype, mosaic=True)
+                 for lay in (Layout.LANE, Layout.SUBLANE)]
+        tile = max(plans, key=lambda p: (p.frames_per_tile, -p.vmem_bytes))
+    else:
+        tile = plan_tiles(trellis, spec, pack_survivors=pack_survivors,
+                          radix=radix, vmem_budget=vmem_budget,
+                          max_frames=max_frames, unified=unified,
+                          layout=layout, bm_dtype=bm_dtype)
+    if chunk_frames is None:
+        chunk_frames = 2 * tile.frames_per_tile * num_devices
+    return DecodePlan(tile, pack_survivors, radix, chunk_frames, num_devices)

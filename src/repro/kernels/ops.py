@@ -2,8 +2,14 @@
 
 Handles frame-count padding to the tile size, selects unified vs split
 (forward kernel + separate traceback) execution, resolves the
-``frames_per_tile='auto'`` tile plan (kernels/autotune.py), and exposes one
-call the rest of the framework uses: ``viterbi_decode_frames``.
+``frames_per_tile='auto'`` tile plan (kernels/autotune.py — budgeting the
+kernel that will actually run), and exposes one call the rest of the
+framework uses: ``viterbi_decode_frames``.
+
+Defaults are the library's best-known configuration (bit-packed survivors,
+radix-4, autotuned tiles — the same defaults as core.pipeline.DecoderConfig);
+pass ``pack_survivors=False, radix=2, frames_per_tile=8`` explicitly to
+reproduce the seed kernel behavior.
 """
 from __future__ import annotations
 
@@ -13,9 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.framed import FrameSpec
-from ..core.traceback import parallel_traceback, serial_traceback
+from ..core.traceback import parallel_traceback_frames, serial_traceback_frames
 from ..core.trellis import Trellis
 from .autotune import plan_tiles
+from .packing import Layout
 from .viterbi_fwd import forward_frames
 from .viterbi_unified import unified_decode_frames
 
@@ -32,28 +39,39 @@ def _pad_frames(frames: jax.Array, tile: int):
 
 @partial(jax.jit, static_argnames=("trellis", "spec", "unified",
                                    "frames_per_tile", "pack_survivors",
-                                   "radix", "interpret"))
+                                   "radix", "layout", "bm_dtype",
+                                   "interpret"))
 def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
                           spec: FrameSpec, *, unified: bool = True,
-                          frames_per_tile: int | str = 8,
-                          pack_survivors: bool = False, radix: int = 2,
+                          frames_per_tile: int | str = "auto",
+                          pack_survivors: bool = True, radix: int = 4,
+                          layout: str = "lane", bm_dtype: str = "float32",
                           interpret: bool = True) -> jax.Array:
     """(F, L, beta) LLR frames -> (F, f) decoded bits.
 
     unified=True  : the paper's single-kernel path (survivors in VMEM only).
     unified=False : prior-work baseline — forward kernel streams survivors
-                    to HBM, traceback runs as a separate (vmapped) step.
+                    to HBM, traceback runs as a separate batched step.
     frames_per_tile: frames decoded per kernel grid step, or 'auto' to let
-                    the VMEM-budget planner choose (autotune.plan_tiles).
+                    the VMEM-budget planner choose (autotune.plan_tiles,
+                    budgeting whichever kernel/layout/dtype runs here).
     pack_survivors: bit-pack the survivor array 32x (VMEM scratch for the
                     unified kernel, the HBM stream for the split baseline).
     radix         : 2, or 4 to fuse two trellis stages per ACS/traceback
-                    step. All knob combinations decode bit-identically.
+                    step.
+    layout        : 'lane' (frames on sublanes, PR-1 orientation) or
+                    'sublane' (Mosaic-native, frames on lanes; the layout
+                    whose packing survives hardware lane padding).
+    bm_dtype      : 'float32' | 'bfloat16' branch-metric storage. All knob
+                    combinations decode bit-identically except bf16, which
+                    quantizes the metrics once (BER-neutral to ~1e-3).
     """
     spec.validate()
+    lay = Layout(layout)
     if frames_per_tile == "auto":
         frames_per_tile = plan_tiles(
             trellis, spec, pack_survivors=pack_survivors, radix=radix,
+            unified=unified, layout=lay, bm_dtype=bm_dtype,
             max_frames=frames.shape[0]).frames_per_tile
     # serial traceback == one subframe spanning the kept region (DESIGN §2)
     f0 = spec.f0 if spec.parallel_tb else spec.f
@@ -65,19 +83,23 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
         bits = unified_decode_frames(
             padded, trellis=trellis, v1=spec.v1, f=spec.f, v2=spec.v2,
             f0=f0, v2s=v2s, start=start, frames_per_tile=frames_per_tile,
-            pack_survivors=pack_survivors, radix=radix, interpret=interpret)
+            pack_survivors=pack_survivors, radix=radix, layout=lay.value,
+            bm_dtype=bm_dtype, interpret=interpret)
         return bits[:F]
 
     sel, amax = forward_frames(padded, trellis=trellis,
                                frames_per_tile=frames_per_tile,
                                pack_survivors=pack_survivors, radix=radix,
+                               layout=lay.value, bm_dtype=bm_dtype,
                                interpret=interpret)
-    sel, amax = sel[:F], amax[:F]                    # HBM round-trip
+    # HBM round-trip; the sublane stream keeps frames on the trailing axis
+    if lay is Layout.SUBLANE:
+        sel, amax = sel[..., :F], amax[:F]
+    else:
+        sel, amax = sel[:F], amax[:F]
     if spec.parallel_tb:
-        tb = lambda s, a: parallel_traceback(s, a, trellis, spec.v1, spec.f,
-                                             spec.f0, spec.v2s, spec.start,
-                                             packed=pack_survivors)
-        return jax.vmap(tb)(sel, amax)
-    tb = lambda s, a: serial_traceback(s, trellis, a[-1], spec.v1, spec.f,
-                                       packed=pack_survivors)
-    return jax.vmap(tb)(sel, amax)
+        return parallel_traceback_frames(
+            sel, amax, trellis, spec.v1, spec.f, spec.f0, spec.v2s,
+            spec.start, packed=pack_survivors, layout=lay)
+    return serial_traceback_frames(sel, amax, trellis, spec.v1, spec.f,
+                                   packed=pack_survivors, layout=lay)

@@ -8,15 +8,27 @@ decoder in the literature (Peng et al. arXiv:1608.00066; Mohammadidoost &
 Hashemi arXiv:2011.13579) packs survivors into machine words; this module
 is the TPU/Pallas equivalent.
 
-Layout: packing runs along the trailing (state = lane) axis, contiguous —
-word ``w`` of a packed row holds states ``[32w, 32w+32)`` with state ``s``
-at bit ``s % 32``:
+Two physical layouts, selected by the ``Layout`` enum:
+
+``Layout.LANE`` (the PR-1 layout) packs along the trailing (state = lane)
+axis, contiguous — word ``w`` of a packed row holds states ``[32w, 32w+32)``
+with state ``s`` at bit ``s % 32``:
 
     packed[..., s // 32] >> (s % 32) & 1 == sel[..., s]
 
-Contiguous (not strided) layout keeps the traceback's bit-extract a single
-compare-free shift once the word is gathered, and round-trips through
-numpy's ``unpackbits`` convention trivially.
+``Layout.SUBLANE`` is the Mosaic-native variant: the packed-word axis sits
+at position -2 (the TPU *sublane* dimension) and the payload axis — frames
+in the kernels — stays trailing, on the 128 *lanes*:
+
+    sel (..., S, N)  ->  packed (..., W, N),
+    packed[..., s // 32, :] >> (s % 32) & 1 == sel[..., s, :]
+
+On real Mosaic an (8 sublane x 128 lane) tile pads the trailing dim to 128,
+so a lane-packed ``(.., W=2)`` array is allocated as if it were 128 wide —
+the 32x compression evaporates. Sublane packing puts the tiny W dim where
+padding costs at most 8/W and fills the lanes with frames, which is what
+makes the compression survive compiled mode (kernels/autotune.py's
+``mosaic_padded_bytes`` models exactly this).
 
 All functions are pure jnp on static shapes, so they work identically
 inside Pallas kernel bodies (interpret or compiled — XLA folds the shift
@@ -26,11 +38,20 @@ zero-padded word — still a win vs S int8s for S > 4.
 """
 from __future__ import annotations
 
+import enum
+
 import jax.numpy as jnp
 
-__all__ = ["BITS", "packed_width", "pack_bits", "unpack_bits", "extract_bit"]
+__all__ = ["BITS", "Layout", "packed_width", "pack_bits", "unpack_bits",
+           "extract_bit"]
 
 BITS = 32          # word width: int32 is the TPU-native integer lane type
+
+
+class Layout(str, enum.Enum):
+    """Physical placement of the packed-word axis (TPU tiling aware)."""
+    LANE = "lane"         # words trailing (lanes): (..., N, W) from (..., N, S)
+    SUBLANE = "sublane"   # words at -2 (sublanes): (..., W, N) from (..., S, N)
 
 
 def packed_width(n: int) -> int:
@@ -38,12 +59,8 @@ def packed_width(n: int) -> int:
     return -(-n // BITS)
 
 
-def pack_bits(sel: jnp.ndarray) -> jnp.ndarray:
-    """(..., n) {0,1}-valued -> (..., packed_width(n)) int32.
-
-    Bit ``n % 32 == 31`` lands in the int32 sign bit; two's-complement
-    wraparound in the weighted sum makes that exact.
-    """
+def _pack_last(sel: jnp.ndarray) -> jnp.ndarray:
+    """(..., n) {0,1}-valued -> (..., packed_width(n)) int32 along -1."""
     n = sel.shape[-1]
     w = packed_width(n)
     x = sel.astype(jnp.int32)
@@ -56,29 +73,69 @@ def pack_bits(sel: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(x * weights, axis=-1, dtype=jnp.int32)
 
 
-def unpack_bits(packed: jnp.ndarray, n: int) -> jnp.ndarray:
-    """(..., w) int32 -> (..., n) int32 of {0,1}; inverse of pack_bits."""
-    w = packed.shape[-1]
+def pack_bits(sel: jnp.ndarray, layout: Layout = Layout.LANE) -> jnp.ndarray:
+    """Pack selector bits into int32 words.
+
+    LANE:    pack axis -1;  (..., n)    -> (..., w).
+    SUBLANE: pack axis -2;  (..., n, N) -> (..., w, N) — the bit axis is the
+             second-to-last (sublane) dim, the trailing payload axis (frames
+             on lanes) is untouched.
+
+    Bit ``n % 32 == 31`` lands in the int32 sign bit; two's-complement
+    wraparound in the weighted sum makes that exact.
+    """
+    if Layout(layout) is Layout.LANE:
+        return _pack_last(sel)
+    n = sel.shape[-2]
+    w = packed_width(n)
+    x = sel.astype(jnp.int32)
+    if w * BITS != n:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, w * BITS - n), (0, 0)]
+        x = jnp.pad(x, pad)
+    x = x.reshape(*x.shape[:-2], w, BITS, x.shape[-1])
+    weights = jnp.left_shift(jnp.int32(1),
+                             jnp.arange(BITS, dtype=jnp.int32))[:, None]
+    return jnp.sum(x * weights, axis=-2, dtype=jnp.int32)
+
+
+def unpack_bits(packed: jnp.ndarray, n: int,
+                layout: Layout = Layout.LANE) -> jnp.ndarray:
+    """Inverse of pack_bits for either layout (values in {0, 1})."""
     shifts = jnp.arange(BITS, dtype=jnp.int32)
-    bits = (packed[..., :, None] >> shifts) & 1      # (..., w, 32)
-    return bits.reshape(*packed.shape[:-1], w * BITS)[..., :n]
+    if Layout(layout) is Layout.LANE:
+        w = packed.shape[-1]
+        bits = (packed[..., :, None] >> shifts) & 1      # (..., w, 32)
+        return bits.reshape(*packed.shape[:-1], w * BITS)[..., :n]
+    w = packed.shape[-2]
+    bits = (packed[..., :, None, :] >> shifts[:, None]) & 1  # (..., w, 32, N)
+    out = bits.reshape(*packed.shape[:-2], w * BITS, packed.shape[-1])
+    return out[..., :n, :]
 
 
-def extract_bit(packed_row: jnp.ndarray, state: jnp.ndarray) -> jnp.ndarray:
+def extract_bit(packed_row: jnp.ndarray, state: jnp.ndarray,
+                layout: Layout = Layout.LANE) -> jnp.ndarray:
     """Selector bit of ``state`` from a packed row.
 
-    packed_row: (..., w) int32 packed selectors for one trellis stage.
-    state:      (...) int32 state index, broadcast-compatible with the
-                leading dims of ``packed_row``.
+    LANE:    packed_row (..., w) int32, state (...) broadcast-compatible
+             with the leading dims.
+    SUBLANE: packed_row (..., w, N) int32, state (..., N) — one lookup per
+             trailing lane, words gathered across the sublane axis.
 
     Uses a word-index one-hot reduction instead of a data-dependent gather
     so it lowers to pure vector ops inside Pallas kernels (mirrors the
     unpacked kernels' one-hot selector extraction). The ``& 1`` after the
     arithmetic shift makes sign-extension of bit-31 words harmless.
     """
-    w = packed_row.shape[-1]
-    word_id = state >> 5                             # state // 32
-    lanes = jnp.arange(w, dtype=jnp.int32)
-    onehot = (word_id[..., None] == lanes).astype(jnp.int32)
-    word = jnp.sum(packed_row * onehot, axis=-1)
+    if Layout(layout) is Layout.LANE:
+        w = packed_row.shape[-1]
+        word_id = state >> 5                             # state // 32
+        lanes = jnp.arange(w, dtype=jnp.int32)
+        onehot = (word_id[..., None] == lanes).astype(jnp.int32)
+        word = jnp.sum(packed_row * onehot, axis=-1)
+        return (word >> (state & (BITS - 1))) & 1
+    w = packed_row.shape[-2]
+    word_id = state >> 5                                 # (..., N)
+    subs = jnp.arange(w, dtype=jnp.int32)[:, None]       # (w, 1)
+    onehot = (word_id[..., None, :] == subs).astype(jnp.int32)  # (..., w, N)
+    word = jnp.sum(packed_row * onehot, axis=-2)
     return (word >> (state & (BITS - 1))) & 1

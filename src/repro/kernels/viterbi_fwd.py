@@ -12,6 +12,17 @@ than the int8 stream — which keeps the split-vs-unified comparison honest
 once the unified kernel packs its VMEM scratch. ``radix=4`` fuses two
 trellis stages per scan step (see tables.radix4_tables); both knobs are
 bit-exact vs the radix-2 / unpacked seed kernel.
+
+``layout`` re-orients the stream for the TPU's (8 sublane x 128 lane)
+tiles (kernels/packing.Layout):
+  * lane    — (F, L, W) int32 / (F, L, S) int8: frame-major, packed words
+    (or states) trailing. The per-tile staging block lane-pads the tiny W
+    dim to 128 on real Mosaic.
+  * sublane — frames on the trailing lane axis: packed (L*W, F) int32
+    (stage-flattened rows, like the unified kernel's scratch) or unpacked
+    (L, S, F) int8. The JAX-level traceback consumes this orientation
+    directly (core/traceback.*_frames), so the stream is never transposed.
+``bm_dtype`` sets the branch-metric scratch dtype (see acs.py).
 """
 from __future__ import annotations
 
@@ -25,53 +36,87 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.trellis import Trellis
 from .acs import acs_scan
-from .packing import pack_bits, packed_width
+from .packing import Layout, pack_bits, packed_width
 
 __all__ = ["forward_frames"]
 
 
 def _kernel(llr_ref, sel_ref, amax_ref, bm_ref, *, trellis: Trellis, L: int,
-            pack: bool, radix: int):
+            pack: bool, radix: int, layout: Layout, bm_dtype):
     # same forward recursion as the unified kernel (shared via acs.py);
     # only the survivor destination differs: HBM-backed output refs.
-    def store(t, sel, sigma):
-        if pack:
-            sel_ref[:, t, :] = pack_bits(sel)        # -> HBM, 1 bit/state
-        else:
-            sel_ref[:, t, :] = sel.astype(jnp.int8)  # -> HBM, 1 byte/state
-        amax_ref[:, t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
+    sub = layout is Layout.SUBLANE
+    W = packed_width(trellis.num_states)
 
-    acs_scan(llr_ref, bm_ref, trellis=trellis, L=L, radix=radix, store=store)
+    def store(t, sel, sigma):
+        if sub:                                      # sel/sigma are (S, FT)
+            if pack:
+                sel_ref[pl.ds(t * W, W)] = pack_bits(sel, Layout.SUBLANE)
+            else:
+                sel_ref[t] = sel.astype(jnp.int8)
+            amax_ref[:, t] = jnp.argmax(sigma, axis=0).astype(jnp.int32)
+        else:                                        # sel/sigma are (FT, S)
+            if pack:
+                sel_ref[:, t, :] = pack_bits(sel)    # -> HBM, 1 bit/state
+            else:
+                sel_ref[:, t, :] = sel.astype(jnp.int8)  # 1 byte/state
+            amax_ref[:, t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
+
+    acs_scan(llr_ref, bm_ref, trellis=trellis, L=L, radix=radix, store=store,
+             layout=layout, bm_dtype=bm_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "trellis", "frames_per_tile", "pack_survivors", "radix", "interpret"))
+    "trellis", "frames_per_tile", "pack_survivors", "radix", "layout",
+    "bm_dtype", "interpret"))
 def forward_frames(frames: jax.Array, *, trellis: Trellis,
                    frames_per_tile: int = 8, pack_survivors: bool = False,
-                   radix: int = 2, interpret: bool = True):
+                   radix: int = 2, layout: str = "lane",
+                   bm_dtype: str = "float32", interpret: bool = True):
     """(F, L, beta) llr -> (sel, amax (F, L) int32) in HBM.
 
-    sel is (F, L, S) int8, or (F, L, ceil(S/32)) int32 when packed.
+    sel layout/shape: lane (F, L, S) int8 or packed (F, L, ceil(S/32))
+    int32; sublane (L, S, F) int8 or packed (L*ceil(S/32), F) int32.
     """
     F, L, beta = frames.shape
     FT = frames_per_tile
     assert F % FT == 0, (F, FT)
     assert radix in (2, 4), radix
+    layout = Layout(layout)
+    bm_dt = jnp.dtype(bm_dtype)
     S = trellis.num_states
     half = 1 << (trellis.beta - 1)
-    sel_w = packed_width(S) if pack_survivors else S
-    sel_dt = jnp.int32 if pack_survivors else jnp.int8
+    W = packed_width(S)
+    sub = layout is Layout.SUBLANE
+
+    if sub:
+        inputs = frames.reshape(F, L * beta)
+        in_spec = pl.BlockSpec((FT, L * beta), lambda i: (i, 0))
+        if pack_survivors:
+            sel_spec = pl.BlockSpec((L * W, FT), lambda i: (0, i))
+            sel_shape = jax.ShapeDtypeStruct((L * W, F), jnp.int32)
+        else:
+            sel_spec = pl.BlockSpec((L, S, FT), lambda i: (0, 0, i))
+            sel_shape = jax.ShapeDtypeStruct((L, S, F), jnp.int8)
+        bm_scratch = pltpu.VMEM((L * half, FT), bm_dt)
+    else:
+        inputs = frames
+        in_spec = pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))
+        sel_w = W if pack_survivors else S
+        sel_dt = jnp.int32 if pack_survivors else jnp.int8
+        sel_spec = pl.BlockSpec((FT, L, sel_w), lambda i: (i, 0, 0))
+        sel_shape = jax.ShapeDtypeStruct((F, L, sel_w), sel_dt)
+        bm_scratch = pltpu.VMEM((L, FT, half), bm_dt)
 
     kern = functools.partial(_kernel, trellis=trellis, L=L,
-                             pack=pack_survivors, radix=radix)
+                             pack=pack_survivors, radix=radix, layout=layout,
+                             bm_dtype=bm_dt)
     return pl.pallas_call(
         kern,
         grid=(F // FT,),
-        in_specs=[pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))],
-        out_specs=[pl.BlockSpec((FT, L, sel_w), lambda i: (i, 0, 0)),
-                   pl.BlockSpec((FT, L), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((F, L, sel_w), sel_dt),
-                   jax.ShapeDtypeStruct((F, L), jnp.int32)],
-        scratch_shapes=[pltpu.VMEM((L, FT, half), jnp.float32)],
+        in_specs=[in_spec],
+        out_specs=[sel_spec, pl.BlockSpec((FT, L), lambda i: (i, 0))],
+        out_shape=[sel_shape, jax.ShapeDtypeStruct((F, L), jnp.int32)],
+        scratch_shapes=[bm_scratch],
         interpret=interpret,
-    )(frames)
+    )(inputs)

@@ -9,42 +9,48 @@ for intermediate data = none.
 
 TPU mapping (DESIGN.md §2):
   * grid = frame tiles; each grid step decodes ``FT`` frames entirely in VMEM
-    (FT plays the role of "multiple frames per block" from §IV-F: it fills
-    the 8 sublanes, and packs the S=64 states onto the lane dimension).
+    (FT plays the role of "multiple frames per block" from §IV-F).
   * the ACS butterfly is arithmetic, not gathers: prev(j,p) = ((j<<1)&(S-1))|p,
     so the traceback pointer chase is pure vector integer ops; the only
     gathers are static-index permutations of the path-metric vector.
   * branch metrics are precomputed coalesced (paper Fig. 7) in the
-    symmetry-compressed 2^(beta-1) form (eq. 9) into VMEM scratch.
+    symmetry-compressed 2^(beta-1) form (eq. 9) into VMEM scratch, stored in
+    ``bm_dtype`` (float32, or bfloat16 to halve that term; path metrics
+    always accumulate in float32).
   * the parallel traceback advances all ``nsub`` subframe cursors of all
     ``FT`` frames in lock-step: the backward pass costs f0+v2s vector steps.
 
-Two perf knobs added on top of the seed kernel (both bit-exact vs the
-pure-JAX oracle — see kernels/packing.py and kernels/tables.py):
-  * ``pack_survivors``: the survivor array stores 1 selector *bit* per
-    (stage, state); packing 32 states per int32 word shrinks the dominant
-    VMEM array 32x and is what makes frames_per_tile >= 32 fit.
-  * ``radix=4``: two trellis stages fused per scan step (and per traceback
-    step) with the fused branch-metric table of ``radix4_tables`` — half
-    the trip count on both hot loops, identical arithmetic per stage.
+Memory layouts (kernels/packing.Layout; paper §IV-F "multiple frames per
+block" meets the TPU's (8 sublane x 128 lane) tiles):
+  * ``lane``    — PR-1 orientation: frames on sublanes, states on lanes;
+    packed survivor words sit on the trailing lane axis. Right for small FT
+    (the FT x S transpose fills lanes with states), but on real Mosaic the
+    trailing W=ceil(S/32) words are lane-padded to 128, so the 32x packing
+    only materializes in interpret mode.
+  * ``sublane`` — Mosaic-native: frames fill the 128 lanes, the recursion
+    runs transposed (S, FT), and the two big scratches are FLAT 2D arrays —
+    survivors (L*W, FT), branch metrics (L*half, FT) — so the tiny W/half
+    dims are absorbed into the sublane axis instead of being padded to a
+    full tile. The LLR block arrives flattened (FT, L*beta) for the same
+    reason. This is the layout that keeps the 32x compression on hardware.
 
-VMEM budget per grid step (K=7, L=v1+f+v2≈340, f0+v2s≈77, W=ceil(S/32)=2):
+VMEM budget per grid step, K=7 / L=340 / f0+v2s=77 / W=2 / half=2, packed
+survivors, logical vs Mosaic-padded ((8,128) f32/int32 tiles) bytes:
 
-                          unpacked, FT=8          packed, FT=32
-  llr block   FT*L*beta*4          ≈ 21 KiB              ≈  85 KiB
-  bm (eq. 9)  L*FT*2^(b-1)*4       ≈ 21 KiB              ≈  85 KiB
-  sel         L*FT*S*4             ≈ 680 KiB     L*FT*W*4 ≈ 85 KiB
-  amax        L*FT*4               ≈ 10 KiB              ≈  43 KiB
-  tb bits     (f0+v2s)*nsub*FT*4   ≈ 20 KiB              ≈  77 KiB
-  total                            ≈ 0.75 MiB            ≈ 0.37 MiB
+                    lane, FT=32            sublane, FT=128
+                  logical   padded        logical   padded
+  llr block        85 KiB   5.38 MiB      340 KiB   384 KiB
+  bm (eq. 9)       85 KiB   5.31 MiB      340 KiB   340 KiB   (bf16: 172)
+  sel survivors    85 KiB   5.31 MiB      340 KiB   340 KiB
+  amax             43 KiB   168 KiB       170 KiB   172 KiB
+  tb bits          77 KiB   308 KiB       308 KiB   308 KiB
+  out block        32 KiB    32 KiB       128 KiB   128 KiB
+  total          ~0.40 MiB ~16.5 MiB     ~1.59 MiB ~1.63 MiB
 
-i.e. packing turns ``sel`` from ~90% of the footprint into a co-equal
-term, so 4x the frames per tile still costs half the seed's VMEM — that
-headroom is what kernels/autotune.py spends. (On real Mosaic the packed
-(…, W=2) trailing dim is lane-padded to 128, so the full 32x only
-materializes for S >= 4096 states or a sublane-major relayout; the
-interpret-mode model and the scratch *spec* already account 32x, which is
-the honest budget for the GPU target the paper describes.)
+i.e. the lane layout's interpret-mode budget is a fiction on hardware (its
+padded footprint exceeds the whole 16 MiB VMEM at FT=32), while the
+sublane layout decodes 4x the frames in ~1/10th the padded footprint —
+that is what kernels/autotune.py's ``mosaic_padded_bytes`` model spends.
 """
 from __future__ import annotations
 
@@ -58,30 +64,43 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.trellis import Trellis
 from .acs import acs_scan
-from .packing import extract_bit, pack_bits, packed_width
+from .packing import Layout, extract_bit, pack_bits, packed_width
 
 __all__ = ["unified_decode_frames"]
 
 
 def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
             trellis: Trellis, v1: int, f: int, v2: int, f0: int, v2s: int,
-            start: str, pack: bool, radix: int):
+            start: str, pack: bool, radix: int, layout: Layout, bm_dtype):
     S = trellis.num_states
     kshift = trellis.k - 2
     L = v1 + f + v2
     FT = llr_ref.shape[0]
     nsub = f // f0
+    sub = layout is Layout.SUBLANE
+    W = packed_width(S)
 
     # ---- phases 1+2: branch metrics + ACS, survivors stay in VMEM --------
-    # (Fig. 7 / Alg. 3; recursion shared with viterbi_fwd via acs.py)
+    # (Fig. 7 / Alg. 3; recursion shared with viterbi_fwd via acs.py).
+    # LANE: sel/sigma are (FT, S); SUBLANE: transposed (S, FT).
     def store(t, sel, sigma):
-        sel_ref[t] = pack_bits(sel) if pack else sel.astype(jnp.int32)
-        amax_ref[t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
+        if sub:
+            if pack:
+                sel_ref[pl.ds(t * W, W)] = pack_bits(sel, Layout.SUBLANE)
+            else:
+                sel_ref[t] = sel.astype(jnp.int32)
+            amax_ref[t] = jnp.argmax(sigma, axis=0).astype(jnp.int32)
+        else:
+            sel_ref[t] = pack_bits(sel) if pack else sel.astype(jnp.int32)
+            amax_ref[t] = jnp.argmax(sigma, axis=1).astype(jnp.int32)
 
-    acs_scan(llr_ref, bm_ref, trellis=trellis, L=L, radix=radix, store=store)
+    acs_scan(llr_ref, bm_ref, trellis=trellis, L=L, radix=radix, store=store,
+             layout=layout, bm_dtype=bm_dtype)
 
     # ---- phase 3: parallel traceback (paper §IV-D, Fig. 5) ---------------
-    sel_all = sel_ref[...]                           # (L, FT, W|S) VMEM read
+    sel_all = sel_ref[...]                           # whole survivor scratch
+    if sub and pack:
+        sel_all = sel_all.reshape(L, W, FT)          # flat rows -> stages
     amax_all = amax_ref[...]                         # (L, FT)
     q = jnp.arange(nsub, dtype=jnp.int32)
     e = v1 + (q + 1) * f0 - 1 + v2s                  # chase starts, (nsub,)
@@ -89,12 +108,18 @@ def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
         states = jnp.take(amax_all, e, axis=0)       # (nsub, FT)
     else:                                            # 'fixed' (Fig. 11)
         states = jnp.zeros((nsub, FT), jnp.int32)
-    lane = jax.lax.broadcasted_iota(jnp.int32, (nsub, FT, S), 2)
 
     def sel_at(t, states):                           # selector bit (nsub,FT)
-        rows = jnp.take(sel_all, t, axis=0)          # (nsub, FT, W|S)
-        if pack:
+        rows = jnp.take(sel_all, t, axis=0)
+        if sub:                                      # rows (nsub, W|S, FT)
+            if pack:
+                return extract_bit(rows, states, Layout.SUBLANE)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (nsub, S, FT), 1)
+            onehot = (states[:, None, :] == lane).astype(jnp.int32)
+            return jnp.sum(rows * onehot, axis=1)
+        if pack:                                     # rows (nsub, FT, W|S)
             return extract_bit(rows, states)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (nsub, FT, S), 2)
         onehot = (states[..., None] == lane).astype(jnp.int32)
         return jnp.sum(rows * onehot, axis=2)
 
@@ -112,7 +137,7 @@ def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
         if T % 2:
             states = tb_step(T - 1, states)
     else:
-        jax.lax.fori_loop(0, T, tb_step, states)
+        states = jax.lax.fori_loop(0, T, tb_step, states)
 
     # ---- phase 4: assemble + single coalesced HBM write ------------------
     tb = tb_ref[...]                                 # (f0+v2s, nsub, FT)
@@ -123,43 +148,65 @@ def _kernel(llr_ref, out_ref, sel_ref, amax_ref, bm_ref, tb_ref, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "trellis", "v1", "f", "v2", "f0", "v2s", "start", "frames_per_tile",
-    "pack_survivors", "radix", "interpret"))
+    "pack_survivors", "radix", "layout", "bm_dtype", "interpret"))
 def unified_decode_frames(frames: jax.Array, *, trellis: Trellis, v1: int,
                           f: int, v2: int, f0: int, v2s: int,
                           start: str = "boundary", frames_per_tile: int = 8,
                           pack_survivors: bool = False, radix: int = 2,
+                          layout: str = "lane", bm_dtype: str = "float32",
                           interpret: bool = True) -> jax.Array:
     """Decode (F, L, beta) LLR frames -> (F, f) bits with the unified kernel.
 
     F must be a multiple of ``frames_per_tile`` (ops.py pads).
     ``pack_survivors`` bit-packs the VMEM survivor scratch 32x; ``radix=4``
-    fuses two trellis stages per ACS/traceback step. Both are bit-exact.
+    fuses two trellis stages per ACS/traceback step; ``layout`` picks the
+    lane (frames-on-sublanes) or Mosaic-native sublane (frames-on-lanes)
+    orientation. All are bit-exact. ``bm_dtype='bfloat16'`` stores the
+    branch metrics compressed (fp32 accumulation): not bit-exact, but BER-
+    neutral to within 1e-3 (tests/test_ber.py).
     """
     F, L, beta = frames.shape
     assert L == v1 + f + v2, (L, v1, f, v2)
     assert f % f0 == 0 and v2s <= v2
     assert radix in (2, 4), radix
+    layout = Layout(layout)
+    bm_dt = jnp.dtype(bm_dtype)
     FT = frames_per_tile
     assert F % FT == 0, (F, FT)
     S = trellis.num_states
     half = 1 << (trellis.beta - 1)
     nsub = f // f0
-    sel_w = packed_width(S) if pack_survivors else S
+    W = packed_width(S)
+    sub = layout is Layout.SUBLANE
+
+    if sub:                       # flat LLR block: L*beta on the lane axis
+        inputs = frames.reshape(F, L * beta)
+        in_spec = pl.BlockSpec((FT, L * beta), lambda i: (i, 0))
+        sel_scratch = (pltpu.VMEM((L * W, FT), jnp.int32) if pack_survivors
+                       else pltpu.VMEM((L, S, FT), jnp.int32))
+        bm_scratch = pltpu.VMEM((L * half, FT), bm_dt)
+    else:
+        inputs = frames
+        in_spec = pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))
+        sel_w = W if pack_survivors else S
+        sel_scratch = pltpu.VMEM((L, FT, sel_w), jnp.int32)
+        bm_scratch = pltpu.VMEM((L, FT, half), bm_dt)
 
     kern = functools.partial(_kernel, trellis=trellis, v1=v1, f=f, v2=v2,
                              f0=f0, v2s=v2s, start=start,
-                             pack=pack_survivors, radix=radix)
+                             pack=pack_survivors, radix=radix, layout=layout,
+                             bm_dtype=bm_dt)
     return pl.pallas_call(
         kern,
         grid=(F // FT,),
-        in_specs=[pl.BlockSpec((FT, L, beta), lambda i: (i, 0, 0))],
+        in_specs=[in_spec],
         out_specs=pl.BlockSpec((FT, f), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((F, f), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((L, FT, sel_w), jnp.int32),   # survivors (maybe packed)
+            sel_scratch,                             # survivors (maybe packed)
             pltpu.VMEM((L, FT), jnp.int32),          # per-stage argmax states
-            pltpu.VMEM((L, FT, half), jnp.float32),  # compressed BMs (eq. 9)
+            bm_scratch,                              # compressed BMs (eq. 9)
             pltpu.VMEM((f0 + v2s, nsub, FT), jnp.int32),  # traceback bits
         ],
         interpret=interpret,
-    )(frames)
+    )(inputs)

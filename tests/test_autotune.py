@@ -4,7 +4,10 @@ import pytest
 from repro.core import FrameSpec, STD_K7
 from repro.core.trellis import make_trellis
 from repro.kernels.autotune import (CANDIDATE_TILES, DEFAULT_VMEM_BUDGET,
-                                    plan_tiles, unified_vmem_bytes)
+                                    mosaic_padded_bytes, plan_decode,
+                                    plan_tiles, split_vmem_bytes,
+                                    unified_vmem_bytes)
+from repro.kernels.packing import Layout
 
 SPEC = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
 
@@ -63,6 +66,94 @@ def test_plan_scales_with_state_count():
     p9 = plan_tiles(k9, SPEC, pack_survivors=True)
     assert p9.frames_per_tile < p7.frames_per_tile
     assert p9.vmem_bytes <= p9.budget
+
+
+def test_mosaic_padding_model():
+    """The padded model is the (8,128)-tile arithmetic: trailing dim to
+    128 lanes, second-to-last to 32/itemsize sublanes."""
+    assert mosaic_padded_bytes((340, 32, 2), 4) == 340 * 32 * 128 * 4
+    assert mosaic_padded_bytes((680, 128), 4) == 680 * 128 * 4  # no padding
+    assert mosaic_padded_bytes((2, 128), 4) == 8 * 128 * 4      # sublane pad
+    assert mosaic_padded_bytes((2, 128), 2) == 16 * 128 * 2     # bf16 tile
+    assert mosaic_padded_bytes((2, 128), 1) == 32 * 128 * 1     # int8 tile
+    assert mosaic_padded_bytes((64,), 4) == 8 * 128 * 4   # 1D: one full tile
+
+
+def test_lane_packing_evaporates_under_mosaic():
+    """The ROADMAP open item, as arithmetic: under padded accounting the
+    lane layout's packed sel term is as large as the unpacked one (both
+    lane-pad to 128), while the sublane layout's flat scratch keeps the
+    full 32x."""
+    _, lane_p = unified_vmem_bytes(STD_K7, SPEC, 32, pack_survivors=True,
+                                   mosaic=True)
+    _, lane_u = unified_vmem_bytes(STD_K7, SPEC, 32, mosaic=True)
+    assert dict(lane_p)["sel_survivors"] == dict(lane_u)["sel_survivors"]
+    _, sub_p = unified_vmem_bytes(STD_K7, SPEC, 128, pack_survivors=True,
+                                  layout=Layout.SUBLANE)
+    L, S = SPEC.frame_len, STD_K7.num_states
+    assert dict(sub_p)["sel_survivors"] == \
+        mosaic_padded_bytes((L * (S // 32), 128), 4)
+    # per frame, the flat sublane scratch is >32x below the lane layout's
+    # padded term (63x here: 128-lane padding of W=2 words)
+    assert 32 * dict(sub_p)["sel_survivors"] / 128 \
+        < dict(lane_p)["sel_survivors"] / 32
+
+
+def test_sublane_plan_doubles_frames_at_equal_budget():
+    """Acceptance criterion: under hardware-honest (mosaic) accounting at
+    the SAME 2 MiB budget, the sublane-major packed plan fits >= 2x the
+    frames per tile of the lane layout (and >= 2x PR 1's best recorded
+    auto plan, ft=32)."""
+    lane = plan_tiles(STD_K7, SPEC, pack_survivors=True, radix=4,
+                      mosaic=True)
+    sub = plan_tiles(STD_K7, SPEC, pack_survivors=True, radix=4,
+                     layout=Layout.SUBLANE)
+    assert sub.mosaic and sub.vmem_bytes <= sub.budget
+    assert sub.frames_per_tile >= 2 * lane.frames_per_tile
+    assert sub.frames_per_tile >= 2 * 32            # PR-1's BENCH best plan
+
+
+def test_split_model_is_smaller_and_plans_deeper():
+    """plan_tiles(unified=False) budgets the forward kernel's footprint
+    (no survivor scratch / traceback arrays), so at a pinched budget the
+    split plan fits at least as many frames per tile."""
+    for ft in (8, 32):
+        u, _ = unified_vmem_bytes(STD_K7, SPEC, ft, pack_survivors=True)
+        s, bd = split_vmem_bytes(STD_K7, SPEC, ft, pack_survivors=True)
+        assert s < u
+        assert {n for n, _ in bd} == {"llr_block", "bm_compressed",
+                                      "sel_stream", "amax_stream"}
+    budget = 300 * 1024     # fits split ft=32 (281 KiB), unified only ft=16
+    pu = plan_tiles(STD_K7, SPEC, pack_survivors=True, vmem_budget=budget)
+    ps = plan_tiles(STD_K7, SPEC, pack_survivors=True, vmem_budget=budget,
+                    unified=False)
+    assert ps.kernel == "split" and pu.kernel == "unified"
+    assert ps.frames_per_tile > pu.frames_per_tile
+
+
+def test_bf16_halves_bm_term():
+    _, f32 = unified_vmem_bytes(STD_K7, SPEC, 32, pack_survivors=True)
+    _, bf16 = unified_vmem_bytes(STD_K7, SPEC, 32, pack_survivors=True,
+                                 bm_dtype="bfloat16")
+    assert dict(bf16)["bm_compressed"] == dict(f32)["bm_compressed"] // 2
+    with pytest.raises(ValueError, match="bm_dtype"):
+        unified_vmem_bytes(STD_K7, SPEC, 32, bm_dtype="float16")
+
+
+def test_plan_decode_full_plan():
+    """plan_decode returns everything the front-end executes: auto layout
+    resolves to sublane for this geometry, kernel kwargs splat into ops,
+    and the chunk is a multiple of tiles x devices."""
+    p = plan_decode(STD_K7, SPEC, num_devices=4)
+    assert p.tile.layout is Layout.SUBLANE
+    assert p.unified and p.pack_survivors and p.radix == 4
+    assert p.chunk_frames == 2 * p.frames_per_tile * 4
+    kw = p.kernel_kwargs()
+    assert kw["layout"] == "sublane" and kw["unified"] is True
+    assert kw["frames_per_tile"] == p.frames_per_tile
+    # split planning flows through too
+    ps = plan_decode(STD_K7, SPEC, unified=False)
+    assert not ps.unified and ps.tile.kernel == "split"
 
 
 def test_geometry_validation_errors():

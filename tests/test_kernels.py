@@ -87,33 +87,98 @@ def test_kernel_other_codes(rng, k, polys):
     assert np.array_equal(got, want)
 
 
+@pytest.mark.parametrize("layout", ["lane", "sublane"])
 @pytest.mark.parametrize("pack", [False, True])
 @pytest.mark.parametrize("radix", [2, 4])
-def test_unified_kernel_knobs_match_ref(rng, pack, radix):
-    """Bit-packed survivors and radix-4 ACS are bit-exact, including the
-    odd-length tail paths (L odd, f0+v2s odd)."""
+def test_unified_kernel_knobs_match_ref(rng, pack, radix, layout):
+    """Bit-packed survivors, radix-4 ACS, and both memory layouts are
+    bit-exact, including the odd-length tail paths (L odd, f0+v2s odd)."""
     bits = rng.integers(0, 2, 640)
     spec = FrameSpec(f=64, v1=20, v2=21, f0=16, v2s=21)   # f0+v2s = 37, odd
     frames = _frames(bits, STD_K7, spec, rng)
     want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
     got = np.asarray(ops.viterbi_decode_frames(
-        frames, STD_K7, spec, unified=True, pack_survivors=pack, radix=radix))
+        frames, STD_K7, spec, unified=True, pack_survivors=pack, radix=radix,
+        layout=layout))
     assert np.array_equal(got, want)
 
 
+@pytest.mark.parametrize("layout", ["lane", "sublane"])
 @pytest.mark.parametrize("pack", [False, True])
 @pytest.mark.parametrize("radix", [2, 4])
-def test_split_kernel_knobs_match_ref(rng, pack, radix):
-    """The split path streams (possibly packed) survivors through HBM and
-    traces back at the JAX level — same bits for every knob combo."""
+def test_split_kernel_knobs_match_ref(rng, pack, radix, layout):
+    """The split path streams (possibly packed, possibly sublane-major)
+    survivors through HBM and traces back at the JAX level — same bits for
+    every knob combo."""
     bits = rng.integers(0, 2, 600)
     spec = FrameSpec(f=64, v1=20, v2=20, f0=16, v2s=20)
     frames = _frames(bits, STD_K7, spec, rng)
     want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
     got = np.asarray(ops.viterbi_decode_frames(
         frames, STD_K7, spec, unified=False, pack_survivors=pack,
-        radix=radix))
+        radix=radix, layout=layout))
     assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("unified", [True, False])
+@pytest.mark.parametrize("layout", ["lane", "sublane"])
+def test_split_serial_traceback_layouts(rng, unified, layout):
+    """Serial-traceback specs exercise the batched serial chase in both
+    stream layouts (the sublane path has no vmap fallback)."""
+    bits = rng.integers(0, 2, 400)
+    spec = FrameSpec(f=64, v1=16, v2=16)                  # serial tb
+    frames = _frames(bits, STD_K7, spec, rng)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, unified=unified, layout=layout))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("k,polys", [(4, (0o13, 0o15, 0o17)),   # S=8, beta=3
+                                     (5, (0o23, 0o35))])        # S=16
+def test_small_state_codes_packed_sublane(rng, k, polys):
+    """S < 32 states pack into one zero-padded word; the sublane layout's
+    flat (L*1, FT) scratch and word extraction must stay exact."""
+    tr = make_trellis(k, polys)
+    bits = rng.integers(0, 2, 400)
+    spec = FrameSpec(f=64, v1=16, v2=16, f0=16, v2s=16)
+    frames = _frames(bits, tr, spec, rng, snr=6.0)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, tr, spec))
+    for unified in (True, False):
+        got = np.asarray(ops.viterbi_decode_frames(
+            frames, tr, spec, unified=unified, pack_survivors=True, radix=4,
+            layout="sublane"))
+        assert np.array_equal(got, want), unified
+
+
+def test_deep_tile_ft256(rng):
+    """frames_per_tile >= 256 (beyond PR-1's exercised range): one grid
+    step decodes the whole 256-frame batch in the sublane layout."""
+    spec = FrameSpec(f=16, v1=8, v2=12, f0=8, v2s=12)
+    bits = rng.integers(0, 2, 16 * 256)
+    frames = _frames(bits, STD_K7, spec, rng, snr=5.0)
+    assert frames.shape[0] == 256
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, frames_per_tile=256, pack_survivors=True,
+        radix=4, layout="sublane"))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("layout", ["lane", "sublane"])
+def test_bf16_branch_metrics_decode(rng, layout):
+    """bf16 branch metrics are not bit-exact, but at a clean SNR the
+    decoded bits must still round-trip, and the knob must work on both
+    kernels and layouts (test_ber.py bounds the noisy-channel BER delta)."""
+    bits = rng.integers(0, 2, 640)
+    spec = FrameSpec(f=64, v1=20, v2=20, f0=16, v2s=20)
+    frames = _frames(bits, STD_K7, spec, rng, snr=8.0)
+    for unified in (True, False):
+        got = np.asarray(ops.viterbi_decode_frames(
+            frames, STD_K7, spec, unified=unified, layout=layout,
+            bm_dtype="bfloat16"))
+        decoded = got.reshape(-1)[:len(bits)]
+        assert (decoded != bits).mean() == 0.0, (unified, layout)
 
 
 @pytest.mark.parametrize("k,polys", [(7, (0o171, 0o133)),

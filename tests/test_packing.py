@@ -1,9 +1,10 @@
-"""Unit tests for kernels/packing.py — survivor bit-pack round trips."""
+"""Unit tests for kernels/packing.py — survivor bit-pack round trips in
+both physical layouts (lane-packed and Mosaic-native sublane-packed)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.packing import (BITS, extract_bit, pack_bits,
+from repro.kernels.packing import (BITS, Layout, extract_bit, pack_bits,
                                    packed_width, unpack_bits)
 
 
@@ -15,6 +16,22 @@ def test_pack_unpack_roundtrip(rng, n):
     assert packed.dtype == jnp.int32
     back = np.asarray(unpack_bits(packed, n))
     assert np.array_equal(back, sel)
+
+
+@pytest.mark.parametrize("n", [1, 8, 31, 32, 33, 64, 100])
+def test_pack_unpack_roundtrip_sublane(rng, n):
+    """SUBLANE packs axis -2 (states on sublanes) and leaves the trailing
+    payload (frames-on-lanes) axis alone — for any n, incl. n % 32 != 0."""
+    sel = rng.integers(0, 2, size=(3, n, 6))
+    packed = pack_bits(jnp.asarray(sel), Layout.SUBLANE)
+    assert packed.shape == (3, packed_width(n), 6)
+    assert packed.dtype == jnp.int32
+    back = np.asarray(unpack_bits(packed, n, Layout.SUBLANE))
+    assert np.array_equal(back, sel)
+    # the two layouts hold identical words, just transposed
+    lane = pack_bits(jnp.asarray(sel.swapaxes(-1, -2)))
+    assert np.array_equal(np.asarray(lane).swapaxes(-1, -2),
+                          np.asarray(packed))
 
 
 def test_packed_width():
@@ -38,6 +55,10 @@ def test_sign_bit_roundtrip():
     assert packed[0] == np.int32(-2**31)
     assert np.array_equal(np.asarray(unpack_bits(jnp.asarray(packed), 32)),
                           sel)
+    # same word, sublane orientation
+    packed_s = np.asarray(pack_bits(jnp.asarray(sel)[:, None],
+                                    Layout.SUBLANE))
+    assert packed_s[0, 0] == np.int32(-2**31)
 
 
 @pytest.mark.parametrize("n", [8, 64, 100])
@@ -48,6 +69,16 @@ def test_extract_bit_matches_indexing(rng, n):
     got = np.asarray(extract_bit(packed, states))
     want = sel[np.arange(4), np.asarray(states)]
     assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [8, 33, 64, 100])
+def test_extract_bit_matches_indexing_sublane(rng, n):
+    sel = rng.integers(0, 2, size=(4, n, 9))
+    packed = pack_bits(jnp.asarray(sel), Layout.SUBLANE)
+    states = jnp.asarray(rng.integers(0, n, size=(4, 9)), jnp.int32)
+    got = np.asarray(extract_bit(packed, states, Layout.SUBLANE))
+    i, j = np.mgrid[0:4, 0:9]
+    assert np.array_equal(got, sel[i, np.asarray(states), j])
 
 
 def test_extract_bit_broadcasts(rng):

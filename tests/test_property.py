@@ -55,11 +55,13 @@ def test_puncture_inverse_property(seed, rate, n):
 
 @given(st.integers(0, 2**32 - 1),
        st.sampled_from([(False, 2), (False, 4), (True, 2), (True, 4)]),
-       st.sampled_from([8, 16, "auto"]))
-def test_kernel_variants_bit_identical_to_reference(seed, knobs, ft):
-    """EVERY kernel configuration — packed/unpacked survivors, radix-2/4,
-    any tile size — must decode random LLRs bit-identically to the
-    core.decoder-based oracle, on both the unified and split paths."""
+       st.sampled_from([8, 16, "auto"]),
+       st.sampled_from(["lane", "sublane"]))
+def test_kernel_variants_bit_identical_to_reference(seed, knobs, ft, layout):
+    """EVERY float32 kernel configuration — packed/unpacked survivors,
+    radix-2/4, lane/sublane layout, any tile size — must decode random
+    LLRs bit-identically to the core.decoder-based oracle, on both the
+    unified and split paths."""
     from repro.core.framed import frame_llr
     from repro.kernels import ops, ref
     pack, radix = knobs
@@ -75,8 +77,26 @@ def test_kernel_variants_bit_identical_to_reference(seed, knobs, ft):
     unified = bool(seed & 1)                        # alternate the two paths
     got = np.asarray(ops.viterbi_decode_frames(
         frames, STD_K7, spec, unified=unified, frames_per_tile=ft,
-        pack_survivors=pack, radix=radix))
-    assert np.array_equal(got, want), (spec, pack, radix, ft, unified)
+        pack_survivors=pack, radix=radix, layout=layout))
+    assert np.array_equal(got, want), (spec, pack, radix, ft, unified, layout)
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_stream_decode_equals_single_shot(seed):
+    """Chunked streaming decode (random chunk geometry, ragged pushes) is
+    bit-identical to the single-shot framed decode of the same stream."""
+    from repro.core import DecoderConfig, make_decoder
+    from repro.core.stream import stream_decode
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(300, 1200))
+    spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    cfg = DecoderConfig(spec=spec)
+    llr = rng.standard_normal((n, 2)).astype(np.float32)
+    want = np.asarray(make_decoder(cfg)(jnp.asarray(llr), n))
+    got = stream_decode(cfg, llr, n,
+                        chunk_frames=int(rng.integers(1, 6)),
+                        push_size=int(rng.integers(1, 2 * spec.f)))
+    assert np.array_equal(got, want)
 
 
 @given(st.integers(0, 2**32 - 1), st.integers(50, 300))
@@ -95,14 +115,27 @@ def test_radix4_forward_bit_identical(seed, n):
                           np.asarray(viterbi_decode(llr, STD_K7, 4)))
 
 
-@given(st.integers(0, 2**32 - 1), st.integers(1, 300))
-def test_pack_roundtrip_property(seed, n):
-    from repro.kernels.packing import pack_bits, unpack_bits, packed_width
+@given(st.integers(0, 2**32 - 1), st.integers(1, 300),
+       st.sampled_from(["lane", "sublane"]))
+def test_pack_roundtrip_property(seed, n, layout):
+    from repro.kernels.packing import (Layout, extract_bit, pack_bits,
+                                       unpack_bits, packed_width)
+    lay = Layout(layout)
     rng = np.random.default_rng(seed)
-    sel = rng.integers(0, 2, size=(3, n))
-    packed = pack_bits(jnp.asarray(sel))
-    assert packed.shape == (3, packed_width(n))
-    assert np.array_equal(np.asarray(unpack_bits(packed, n)), sel)
+    if lay is Layout.LANE:
+        sel = rng.integers(0, 2, size=(3, n))
+        packed = pack_bits(jnp.asarray(sel))
+        assert packed.shape == (3, packed_width(n))
+        assert np.array_equal(np.asarray(unpack_bits(packed, n)), sel)
+    else:
+        sel = rng.integers(0, 2, size=(3, n, 4))
+        packed = pack_bits(jnp.asarray(sel), lay)
+        assert packed.shape == (3, packed_width(n), 4)
+        assert np.array_equal(np.asarray(unpack_bits(packed, n, lay)), sel)
+        states = jnp.asarray(rng.integers(0, n, size=(3, 4)), jnp.int32)
+        got = np.asarray(extract_bit(packed, states, lay))
+        i, j = np.mgrid[0:3, 0:4]
+        assert np.array_equal(got, sel[i, np.asarray(states), j])
 
 
 @given(st.integers(0, 2**32 - 1))
