@@ -39,6 +39,10 @@ def main() -> None:
         for r in stream_rows:
             print(f"stream_{r['variant']},{r['us_per_call']:.1f},"
                   f"{r['mbps']:.2f}Mbps")
+        serve_rows = throughput.serve_bench(full=args.full)
+        for r in serve_rows:
+            print(f"serve_{r['variant']}_s{r['sessions']},"
+                  f"{r['us_per_call']:.1f},{r['mbps']:.2f}Mbps")
         plans = throughput.plan_rows()
         for r in plans:
             print(f"plan_{r['plan']},0,ft{r['ft']}@{r['vmem_kib']}KiB")
@@ -47,7 +51,8 @@ def main() -> None:
         # runs APPEND to BENCH_kernels.json — the per-PR trajectory the
         # regression gate (scripts/bench_gate.py) checks against.
         append_run({"full": args.full, "rows": rows,
-                    "streaming": stream_rows, "plans": plans})
+                    "streaming": stream_rows, "serve": serve_rows,
+                    "plans": plans})
     if args.only in (None, "throughput"):
         for r in throughput.main(full=args.full):
             name = f"tput_{r['table']}_" + "_".join(

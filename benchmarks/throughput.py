@@ -197,6 +197,120 @@ def streaming_bench(full: bool = False):
     return rows
 
 
+def serve_bench(full: bool = False):
+    """Multi-tenant serve trajectory: sessions x codes sweep.
+
+    8 (full: 16) concurrent sessions across three code configs — K=7
+    rate-1/2, K=7 rate-3/4 (raw punctured push), K=5 rate-1/2 — decoded
+    (a) by N independent StreamDecoders and (b) by one DecodeServer
+    batching each bucket's windows into single launches. Both run the
+    compiled reference backend on identical arrival patterns (one chunk
+    per session per round), so the delta is purely dispatch aggregation:
+    the server wins when one (slots*C)-frame launch beats `slots`
+    C-frame launches. Aggregate Mb/s is total decoded bits over wall
+    time; the server rows carry the per-bucket latency/occupancy metrics
+    and the plan-cache trace count (the serve acceptance criterion:
+    server >= independent, one compile per bucket shape).
+    """
+    from repro.core import DecoderConfig, make_stream_decoder
+    from repro.core.puncture import PATTERNS
+    from repro.core.trellis import make_trellis
+    from repro.serve import DecodeServer, PlanCache
+
+    C = 16                                     # chunk frames per session
+    nchunks = 24 if full else 6
+    nsess = 16 if full else 8
+    k5 = make_trellis(5, (0o23, 0o35))
+    spec12 = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    spec34 = FrameSpec(f=63, v1=21, v2=21, f0=21, v2s=21)
+    cfgs = [DecoderConfig(spec=spec12),                   # K7 1/2
+            DecoderConfig(spec=spec34, rate="3/4"),       # K7 punctured
+            DecoderConfig(trellis=k5, spec=spec12)]       # K5 1/2
+    # half the sessions on the main code, the rest split across the other
+    # two — every bucket sees real batching (4/2/2 at nsess=8)
+    mix = ([cfgs[0]] * (nsess // 2) + [cfgs[1]] * (nsess // 4)
+           + [cfgs[2]] * (nsess - nsess // 2 - nsess // 4))
+
+    rng = np.random.default_rng(0)
+    streams = []                               # (cfg, raw chunks, n_bits)
+    for cfg in mix:
+        n = C * cfg.spec.f * nchunks           # stages == bits
+        if cfg.rate != "1/2":
+            pat = PATTERNS[cfg.rate]
+            m = n * pat.sum() // pat.shape[1]  # raw punctured symbols
+            raw = rng.standard_normal(m).astype(np.float32)
+            per = m // nchunks
+        else:
+            raw = rng.standard_normal((n, 2)).astype(np.float32)
+            per = n // nchunks
+        streams.append((cfg, [raw[i * per:(i + 1) * per]
+                              for i in range(nchunks)], n))
+    total_bits = sum(n for _, _, n in streams)
+    nbuckets = len({(cfg.trellis, cfg.spec) for cfg, _, _ in streams})
+
+    def run_independent():
+        decs = [make_stream_decoder(cfg, chunk_frames=C)
+                for cfg, _, _ in streams]
+        got = 0
+        for r in range(nchunks):
+            for dec, (_, chunks, _) in zip(decs, streams):
+                got += dec.push(chunks[r]).size
+        for dec in decs:
+            got += dec.flush().size
+        return got
+
+    cache = PlanCache()
+
+    def run_server():
+        srv = DecodeServer(slots=4, max_sessions=2 * nsess, cache=cache)
+        sids = [srv.open_session(cfg, chunk_frames=C)
+                for cfg, _, _ in streams]
+        got = 0
+        for r in range(nchunks):
+            for sid, (_, chunks, _) in zip(sids, streams):
+                srv.push(sid, chunks[r])
+            while srv.step():                  # drain queues, stay async
+                pass
+            for sid in sids:
+                got += srv.poll(sid).size      # non-blocking collect
+        for sid in sids:
+            got += srv.close_session(sid).size
+        return got, srv
+
+    rows = []
+    assert run_independent() >= total_bits     # warm every chunk shape
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        nbits = run_independent()
+        best = min(best, time.perf_counter() - t0)
+    rows.append({"table": "serve", "variant": "independent",
+                 "sessions": nsess, "codes": 3, "buckets": nbuckets,
+                 "chunk_frames": C, "n_bits": total_bits, "reps": 3,
+                 "us_per_call": best * 1e6, "mbps": total_bits / best / 1e6})
+
+    nbits, _ = run_server()                    # warm (and count compiles)
+    assert nbits >= total_bits
+    best, srv = float("inf"), None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        nbits, srv = run_server()
+        best = min(best, time.perf_counter() - t0)
+        assert nbits >= total_bits
+    tot = srv.metrics.totals()
+    rows.append({"table": "serve", "variant": "server",
+                 "sessions": nsess, "codes": 3, "buckets": nbuckets,
+                 "chunk_frames": C, "slots": 4, "n_bits": total_bits,
+                 "reps": 3, "us_per_call": best * 1e6,
+                 "mbps": total_bits / best / 1e6,
+                 "p50_ms": round(tot["p50_ms"], 3),
+                 "p99_ms": round(tot["p99_ms"], 3),
+                 "occupancy": round(tot["occupancy"], 4),
+                 "launches": tot["launches"],
+                 "plan_traces": cache.stats()["traces"]})
+    return rows
+
+
 def plan_rows():
     """Tile plans across layouts/models at the default 2 MiB budget — the
     BENCH_kernels.json record behind the layout acceptance criterion

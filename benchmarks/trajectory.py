@@ -18,7 +18,8 @@ import os
 SCHEMA = "kernel_sweep/v2"
 DEFAULT_PATH = "BENCH_kernels.json"
 
-__all__ = ["SCHEMA", "DEFAULT_PATH", "load_runs", "append_run", "best_mbps"]
+__all__ = ["SCHEMA", "DEFAULT_PATH", "load_runs", "append_run", "best_mbps",
+           "serve_mbps"]
 
 
 def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
@@ -52,3 +53,13 @@ def best_mbps(run: dict) -> float:
     runs; the gate checks ``full`` and ``n_bits`` before trusting this.
     """
     return max((r["mbps"] for r in run.get("rows", [])), default=0.0)
+
+
+def serve_mbps(run: dict, variant: str = "server") -> float:
+    """Aggregate serve throughput of a run's "serve" section (0.0 when the
+    run predates the serve trajectory). ``variant`` picks the DecodeServer
+    row ("server") or the N-independent-StreamDecoders baseline
+    ("independent") — the gate compares server rows across runs with
+    matching (sessions, n_bits) workloads."""
+    return max((r["mbps"] for r in run.get("serve", [])
+                if r.get("variant") == variant), default=0.0)

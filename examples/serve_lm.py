@@ -1,4 +1,9 @@
-"""Batched serving example (continuous batching, slot-based).
+"""Batched LM serving example (continuous batching, slot-based).
+
+NOTE: this is the LANGUAGE-MODEL scaffolding demo (repro.launch.serve,
+token-by-token decode of transformer requests). The Viterbi decode
+service — the multi-tenant session server this repo's paper work feeds —
+is ``repro.serve`` / examples/serve_viterbi.py.
 
 PYTHONPATH=src python examples/serve_lm.py
 """

@@ -1,0 +1,109 @@
+"""Multi-tenant Viterbi decode service demo (repro.serve.DecodeServer).
+
+Opens N sessions across three code configs — the standard K=7 rate-1/2
+code, the same code punctured to rate 3/4 (raw punctured pushes, the
+server depunctures in-stream), and a K=5 code — streams noisy symbols
+chunk by chunk with the slot-based batching server, verifies every
+session against its single-stream ``stream_decode`` baseline, and prints
+the per-bucket occupancy/latency metrics plus the compiled-plan cache
+stats (one trace per bucket shape, regardless of tenant churn).
+
+  PYTHONPATH=src python examples/serve_viterbi.py --sessions 8 --chunks 6
+
+(For the unrelated LM continuous-batching demo, see examples/serve_lm.py.)
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import DecoderConfig, FrameSpec, encode
+from repro.core.puncture import puncture
+from repro.core.stream import stream_decode
+from repro.core.trellis import make_trellis
+from repro.channel.sim import awgn, bpsk
+from repro.serve import Backpressure, DecodeServer, PlanCache
+
+
+def make_rx(trellis, n, rate, seed, snr=4.0):
+    rng = np.random.default_rng(seed)
+    bits = jnp.asarray(rng.integers(0, 2, n))
+    coded = encode(bits, trellis)
+    tx = bpsk(puncture(coded, rate)) if rate != "1/2" \
+        else bpsk(coded.reshape(-1))
+    rx = np.asarray(awgn(jax.random.PRNGKey(seed), tx, snr))
+    return rx if rate != "1/2" else rx.reshape(n, 2)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--chunks", type=int, default=6, help="chunks/session")
+    ap.add_argument("--chunk-frames", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    k5 = make_trellis(5, (0o23, 0o35))
+    spec12 = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    spec34 = FrameSpec(f=63, v1=21, v2=21, f0=21, v2s=21)
+    cfgs = [("K7 r1/2", DecoderConfig(spec=spec12)),
+            ("K7 r3/4", DecoderConfig(spec=spec34, rate="3/4")),
+            ("K5 r1/2", DecoderConfig(trellis=k5, spec=spec12))]
+
+    cache = PlanCache()
+    srv = DecodeServer(slots=args.slots, max_sessions=args.sessions,
+                       queue_depth=4, cache=cache)
+    tenants = []
+    for i in range(args.sessions):
+        name, cfg = cfgs[i % len(cfgs)]
+        n = args.chunks * args.chunk_frames * cfg.spec.f
+        rx = make_rx(cfg.trellis, n, cfg.rate, seed=i)
+        sid = srv.open_session(cfg, chunk_frames=args.chunk_frames)
+        per = rx.shape[0] // args.chunks
+        tenants.append(dict(sid=sid, name=name, cfg=cfg, rx=rx, n=n,
+                            chunks=[rx[j * per:(j + 1) * per]
+                                    for j in range(args.chunks)], out=[]))
+    print(f"{args.sessions} sessions / {len(srv.buckets())} buckets, "
+          f"chunk={args.chunk_frames} frames, slots={args.slots}")
+
+    t0 = time.perf_counter()
+    for r in range(args.chunks):
+        for t in tenants:
+            try:
+                srv.push(t["sid"], t["chunks"][r])
+            except Backpressure:
+                srv.step()
+                srv.push(t["sid"], t["chunks"][r])
+        while srv.step():
+            pass
+        for t in tenants:
+            t["out"].append(srv.poll(t["sid"]))
+    for t in tenants:
+        t["out"].append(srv.close_session(t["sid"]))
+    dt = time.perf_counter() - t0
+
+    total = 0
+    for t in tenants:
+        got = np.concatenate(t["out"])[:t["n"]]
+        want = stream_decode(t["cfg"], t["rx"], t["n"],
+                             chunk_frames=args.chunk_frames)
+        assert np.array_equal(got, want), f"{t['name']} sid={t['sid']}"
+        total += t["n"]
+    print(f"decoded {total} bits in {dt*1e3:.0f} ms "
+          f"({total/dt/1e6:.2f} Mb/s aggregate) — every session "
+          f"bit-identical to its solo stream_decode")
+
+    snap = srv.metrics_snapshot()
+    print(f"{'bucket':<28}{'launches':>9}{'windows':>9}{'occup':>7}"
+          f"{'p50 ms':>8}{'p99 ms':>8}")
+    for row in snap["buckets"]:
+        print(f"{row['bucket']:<28}{row['launches']:>9}{row['windows']:>9}"
+              f"{row['occupancy']:>7.2f}{row['p50_ms']:>8.1f}"
+              f"{row['p99_ms']:>8.1f}")
+    print("plan cache:", snap["plan_cache"])
+
+
+if __name__ == "__main__":
+    main()

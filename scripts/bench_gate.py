@@ -1,9 +1,10 @@
 #!/usr/bin/env python
 """Benchmark-regression gate (scripts/ci.sh).
 
-Runs the interpret-mode kernel sweep + streaming bench + tile-plan report,
-APPENDS the run to BENCH_kernels.json (keeping the per-PR trajectory), and
-fails when the best kernel configuration regresses more than
+Runs the interpret-mode kernel sweep + streaming bench + multi-tenant
+serve bench + tile-plan report, APPENDS the run to BENCH_kernels.json
+(keeping the per-PR trajectory), and fails when the best kernel
+configuration OR the serve aggregate throughput regresses more than
 ``BENCH_GATE_TOL`` (default 20%) against the best comparable run already
 stored. Timing is min-of-reps, which absorbs most shared-runner noise; the
 tolerance absorbs the rest.
@@ -25,22 +26,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 def main() -> int:
     from benchmarks import throughput
     from benchmarks.trajectory import (DEFAULT_PATH, append_run, best_mbps,
-                                       load_runs)
+                                       load_runs, serve_mbps)
 
     tol = float(os.environ.get("BENCH_GATE_TOL", "0.2"))
     path = os.environ.get("BENCH_PATH", DEFAULT_PATH)
 
     rows = throughput.kernel_sweep(full=False)
     stream_rows = throughput.streaming_bench(full=False)
+    serve_rows = throughput.serve_bench(full=False)
     plans = throughput.plan_rows()
     run = {"full": False, "rows": rows, "streaming": stream_rows,
-           "plans": plans, "gate": True}
+           "serve": serve_rows, "plans": plans, "gate": True}
     cur = best_mbps(run)
     n_bits = rows[0]["n_bits"]
 
     prior = load_runs(path)
     # only compare runs of the same workload size (full flag + n_bits)
-    comparable = [best_mbps(r) for r in prior
+    comparable = [r for r in prior
                   if not r.get("full")
                   and all(row.get("n_bits") == n_bits
                           for row in r.get("rows", []))]
@@ -51,16 +53,51 @@ def main() -> int:
                       if r["variant"] != "single_shot"), default=0.0)
     print(f"bench gate: best kernel config {cur:.2f} Mb/s; streaming best "
           f"{beststream:.2f} vs single-shot {single['mbps']:.2f} Mb/s")
+
+    # serve section: aggregate server throughput vs the N-independent
+    # baseline of THIS run, and vs stored server runs of the same workload
+    srv = serve_mbps(run)
+    indep = serve_mbps(run, "independent")
+    srow = next(r for r in serve_rows if r["variant"] == "server")
+    print(f"bench gate: serve {srow['sessions']} sessions/"
+          f"{srow['buckets']} buckets — server {srv:.2f} Mb/s vs "
+          f"independent {indep:.2f} Mb/s (occupancy "
+          f"{srow['occupancy']:.2f}, p99 {srow['p99_ms']:.1f} ms, "
+          f"{srow['plan_traces']} compiles)")
+    if srv < indep:
+        print("bench gate: WARNING — server below summed independent "
+              "StreamDecoders this run (runner noise?); see the stored "
+              "trajectory for the trend")
+    fail = []
+    serve_comp = [serve_mbps(r) for r in comparable
+                  if any(row.get("variant") == "server"
+                         and row.get("sessions") == srow["sessions"]
+                         and row.get("n_bits") == srow["n_bits"]
+                         for row in r.get("serve", []))]
+    if serve_comp:
+        sbase = max(serve_comp)
+        print(f"bench gate: stored serve baseline {sbase:.2f} Mb/s "
+              f"(floor {(1 - tol) * sbase:.2f})")
+        if srv < (1.0 - tol) * sbase:
+            fail.append(f"serve aggregate regressed "
+                        f"{(1 - srv / sbase):.0%} (> {tol:.0%})")
+    else:
+        print("bench gate: no comparable stored serve baseline — "
+              "recorded only")
+
     if not comparable:
         print("bench gate: no comparable stored baseline — recorded only")
-        return 0
-    base = max(comparable)
+        return 1 if fail else 0
+    base = max(best_mbps(r) for r in comparable)
     floor = (1.0 - tol) * base
     print(f"bench gate: stored baseline best {base:.2f} Mb/s "
           f"(floor {floor:.2f}, tol {tol:.0%})")
     if cur < floor:
-        print(f"bench gate: FAIL — best config regressed "
-              f"{(1 - cur / base):.0%} (> {tol:.0%}) vs stored baseline")
+        fail.append(f"best kernel config regressed "
+                    f"{(1 - cur / base):.0%} (> {tol:.0%})")
+    for msg in fail:
+        print(f"bench gate: FAIL — {msg} vs stored baseline")
+    if fail:
         return 1
     print("bench gate: OK")
     return 0

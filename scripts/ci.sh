@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # CI gate: lint + tier-1 test suite + a ~30 s interpret-mode kernel smoke
-# bench + the benchmark-regression gate.
+# bench + a multi-tenant serve smoke + the benchmark-regression gate.
 #
 #   bash scripts/ci.sh           # what .github/workflows/ci.yml runs
 #
@@ -69,6 +69,60 @@ if opt >= seed:
           f"see BENCH_kernels.json for the multi-config sweep")
 assert opt < 3.0 * seed, f"gross perf regression: {opt:.3f}s vs {seed:.3f}s"
 print("SMOKE_OK")
+EOF
+
+# ---- serve smoke: 8 concurrent sessions across 3 code configs through
+# the multi-tenant DecodeServer must be bit-identical to each session's
+# solo stream_decode, with one plan-cache trace per bucket shape.
+python - <<'EOF'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import DecoderConfig, FrameSpec, STD_K7, encode
+from repro.core.puncture import puncture
+from repro.core.stream import stream_decode
+from repro.core.trellis import make_trellis
+from repro.channel.sim import awgn, bpsk
+from repro.serve import DecodeServer, PlanCache
+
+spec12 = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+spec34 = FrameSpec(f=63, v1=21, v2=21, f0=21, v2s=21)
+cfgs = [DecoderConfig(spec=spec12),
+        DecoderConfig(spec=spec34, rate="3/4"),
+        DecoderConfig(trellis=make_trellis(5, (0o23, 0o35)), spec=spec12)]
+rng = np.random.default_rng(0)
+
+def rx_for(cfg, n, seed):
+    bits = jnp.asarray(rng.integers(0, 2, n))
+    coded = encode(bits, cfg.trellis)
+    tx = bpsk(puncture(coded, cfg.rate)) if cfg.rate != "1/2" \
+        else bpsk(coded.reshape(-1))
+    r = np.asarray(awgn(jax.random.PRNGKey(seed), tx, 4.0))
+    return r if cfg.rate != "1/2" else r.reshape(n, 2)
+
+cache = PlanCache()
+srv = DecodeServer(slots=3, cache=cache)
+tenants = []
+for i in range(8):
+    cfg = cfgs[i % 3]
+    n = 4 * 5 * cfg.spec.f
+    rx = rx_for(cfg, n, i)
+    tenants.append((srv.open_session(cfg, chunk_frames=5), cfg, rx, n))
+for r in range(4):
+    for sid, cfg, rx, n in tenants:
+        per = rx.shape[0] // 4
+        srv.push(sid, rx[r * per:(r + 1) * per])
+    while srv.step():
+        pass
+for sid, cfg, rx, n in tenants:
+    got = np.concatenate([srv.poll(sid), srv.close_session(sid)])[:n]
+    want = stream_decode(cfg, rx, n, chunk_frames=5)
+    assert np.array_equal(got, want), f"serve session {sid}: WRONG BITS"
+stats = cache.stats()
+assert stats["traces"] <= 2 * 3, stats   # <=2 batch shapes per bucket
+assert stats["hits"] > stats["misses"], stats
+print(f"serve smoke: 8 sessions / {len(srv.buckets())} buckets bit-exact, "
+      f"plan cache {stats}")
+print("SERVE_SMOKE_OK")
 EOF
 
 python scripts/bench_gate.py

@@ -65,13 +65,9 @@ class DecoderConfig:
                              f"got {self.bm_dtype!r}")
 
 
-def make_frame_decoder(cfg: DecoderConfig):
-    """Returns decode_frames(frames (F, L, beta)) -> (F, f) bits.
-
-    The backend-dispatch core shared by make_decoder, the streaming
-    front-end (core/stream.py) and the sharded decoder (distributed/
-    stream.py). Not jitted here — callers jit the enclosing computation.
-    """
+def _build_frame_decoder(cfg: DecoderConfig):
+    """Build the backend-dispatch closure (uncached — see
+    make_frame_decoder / serve.plan_cache for the shared entry point)."""
     if cfg.backend == "reference":
         def decode_frames(frames):
             return jax.vmap(
@@ -90,6 +86,20 @@ def make_frame_decoder(cfg: DecoderConfig):
     else:
         raise ValueError(cfg.backend)
     return decode_frames
+
+
+def make_frame_decoder(cfg: DecoderConfig):
+    """Returns decode_frames(frames (F, L, beta)) -> (F, f) bits.
+
+    The backend-dispatch core shared by make_decoder, the streaming
+    front-end (core/stream.py) and the sharded decoder (distributed/
+    stream.py). Not jitted here — callers jit the enclosing computation.
+    Memoized per cfg in the process-global compiled-plan cache
+    (serve.plan_cache): every caller gets the SAME closure, so enclosing
+    jits share their trace cache across tenant churn.
+    """
+    from ..serve.plan_cache import PLAN_CACHE
+    return PLAN_CACHE.frame_decoder(cfg)
 
 
 def make_decoder(cfg: DecoderConfig):

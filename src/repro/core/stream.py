@@ -13,6 +13,14 @@ double-buffers the per-chunk kernel dispatch:
   * results are materialized one chunk behind the dispatch front, so a
     ``block_until_ready`` never sits between two kernel launches.
 
+The per-session state — the rolling v1/v2 overlap buffer, the
+stream-global depuncture phase, and the chunk/flush window extraction —
+lives in ``StreamContext``, separate from the dispatch machinery, so the
+multi-tenant serve layer (repro.serve) can run one context per session
+and batch the extracted windows of MANY sessions into a single kernel
+launch. ``StreamDecoder`` is the single-session composition: one context
+plus the double-buffered dispatch front.
+
 Geometry: a chunk covers ``chunk_frames * spec.f`` kept stages; the decode
 window around it is ``[start - v1, end + v2)``. The rolling buffer always
 retains the v1 left-context samples of the NEXT chunk, the flush pads the
@@ -20,23 +28,228 @@ final partial chunk with zero LLRs (neutral, exactly like frame_llr's edge
 padding), and the stream start is zero-padded the same way — hence the
 bit-exact equivalence with ``framed_decode``.
 
+Punctured rates are depunctured INSIDE ``push``: the context tracks the
+stream-global pattern phase, so callers feed the raw punctured symbol
+stream in arbitrary slices (the historical footgun — callers having to
+depuncture the whole stream up front because alignment is stream-global —
+is gone). Zero-LLR insertion is incremental and bit-identical to the
+one-shot ``puncture.depuncture`` of the whole stream.
+
 The chunk size and kernel configuration come from one
 ``kernels.autotune.plan_decode`` plan (the "full plan the front-end
 executes"): tiles from the per-device VMEM budget, chunks as a multiple of
 tiles x devices so a sharded decode (distributed/stream.py) keeps every
-device busy every chunk.
+device busy every chunk. Window decoders are compiled once per
+(trellis, spec, plan, nframes) in the process-global plan cache
+(serve.plan_cache), so building a second StreamDecoder for the same
+configuration — tenant churn — never re-traces.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from .pipeline import DecoderConfig, make_frame_decoder
+from .pipeline import DecoderConfig
+from .puncture import PATTERNS
 
-__all__ = ["StreamDecoder", "make_stream_decoder", "stream_decode"]
+__all__ = ["StreamContext", "StreamDecoder", "Window", "make_stream_decoder",
+           "stream_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """One extracted decode window: ``window`` spans
+    ``[chunk_start - v1, chunk_end + v2)`` stages; decoding it yields
+    ``nframes * f`` bits of which the first ``n_bits`` are real (the rest
+    is flush padding)."""
+    window: np.ndarray        # (v1 + nframes*f + v2, beta) float32
+    nframes: int
+    n_bits: int
+
+    def frames(self, spec) -> np.ndarray:
+        """Frame the window host-side: (nframes, L, beta). Pure gather —
+        identical values to the jitted in-graph framing, so a batch built
+        from these frames decodes bit-identically."""
+        starts = np.arange(self.nframes) * spec.f
+        idx = starts[:, None] + np.arange(spec.frame_len)[None, :]
+        return self.window[idx]
+
+
+class StreamContext:
+    """Per-session chunking state, extracted from StreamDecoder so the
+    serve layer can batch windows across sessions.
+
+    Holds the rolling overlap buffer (always retaining the v1 left
+    context of the next chunk), the pushed/emitted stage counters, and —
+    for punctured rates — the raw-symbol remainder plus the stream-global
+    pattern phase. ``append`` absorbs raw input; ``take_windows`` yields
+    every complete chunk window; ``flush_window`` zero-pads and yields the
+    final partial chunk (or None if nothing is pending).
+    """
+
+    def __init__(self, spec, beta: int, chunk_frames: int, rate: str = "1/2"):
+        assert chunk_frames > 0
+        self.spec = spec
+        self.beta = beta
+        self.chunk_frames = chunk_frames
+        self.rate = rate
+        self.reset()
+
+    def reset(self):
+        # the buffer holds [next_chunk_start - v1, ...); the stream start
+        # gets the same zero left-context frame_llr would pad with
+        self._buf = np.zeros((self.spec.v1, self.beta), np.float32)
+        self._raw = np.zeros((0,), np.float32)  # punctured symbols pending
+        self._phase = 0                         # stages depunctured so far
+        self.n_in = 0                           # stages appended
+        self.n_out = 0                          # bits covered by windows
+
+    # -- depuncturing (stream-global phase) -------------------------------
+    def _stage_counts(self, t_max: int) -> np.ndarray:
+        """Kept symbols per stage for the next ``t_max`` stages (cyclic in
+        the pattern period, offset by the stream-global phase)."""
+        pat = PATTERNS[self.rate]
+        per_stage = pat.sum(axis=0)             # kept symbols at phase t
+        return per_stage[(self._phase + np.arange(t_max)) % pat.shape[1]]
+
+    def _depuncture(self, final: bool) -> np.ndarray:
+        """Convert buffered raw symbols into complete (s, beta) stages.
+
+        Bit-identical to one-shot ``puncture.depuncture`` of the whole
+        stream: punctured positions become neutral zero LLRs. ``final``
+        also emits a trailing stage the remainder only partly fills
+        (missing kept symbols become zeros — an erased tail)."""
+        pat = PATTERNS[self.rate]
+        period = pat.shape[1]
+        r = self._raw.shape[0]
+        if r == 0:
+            return np.zeros((0, self.beta), np.float32)
+        t_max = r + period                       # >= any reachable stage count
+        cum = np.cumsum(self._stage_counts(t_max))
+        s = int(np.searchsorted(cum, r, side="right"))
+        if final and (s == 0 or cum[s - 1] < r):
+            s += 1                               # partial last stage
+        if s == 0:
+            return np.zeros((0, self.beta), np.float32)
+        used = int(min(cum[s - 1], r))
+        p0 = self._phase % period
+        mask = np.tile(pat, (1, -(-(p0 + s) // period))).T[p0:p0 + s]
+        flat = np.zeros((s * self.beta,), np.float32)
+        flat[np.flatnonzero(mask.reshape(-1))[:used]] = self._raw[:used]
+        self._raw = self._raw[used:]
+        self._phase += s
+        return flat.reshape(s, self.beta)
+
+    # -- input / window extraction ----------------------------------------
+    def append(self, llr) -> int:
+        """Absorb raw input; returns the number of stages added.
+
+        rate 1/2: (m, beta) or flat (m*beta,) soft symbols.
+        punctured: the raw punctured symbol stream, flat, any slice size —
+        the pattern alignment is tracked here, stream-globally."""
+        llr = np.asarray(llr, np.float32)
+        if self.rate != "1/2":
+            self._raw = np.concatenate([self._raw, llr.reshape(-1)])
+            staged = self._depuncture(final=False)
+        else:
+            staged = llr.reshape(-1, self.beta)
+        if staged.size:
+            self._buf = np.concatenate([self._buf, staged])
+            self.n_in += staged.shape[0]
+        return staged.shape[0]
+
+    def incoming_stages(self, llr) -> int:
+        """Stages ``append(llr)`` would add — exact, including the
+        punctured-rate phase and raw remainder (the serve layer's
+        backpressure check runs BEFORE absorbing anything)."""
+        llr = np.asarray(llr)
+        if self.rate == "1/2":
+            return llr.size // self.beta
+        r = self._raw.shape[0] + llr.size
+        if r == 0:
+            return 0
+        cum = np.cumsum(self._stage_counts(r + PATTERNS[self.rate].shape[1]))
+        return int(np.searchsorted(cum, r, side="right"))
+
+    def projected_windows(self, add_stages: int) -> int:
+        """Complete chunk windows extractable once ``add_stages`` more
+        stages arrive (counting what is already buffered)."""
+        buf_after = self._buf.shape[0] + add_stages
+        return max(0, (buf_after - self.spec.v1 - self.spec.v2)
+                   // (self.chunk_frames * self.spec.f))
+
+    def take_windows(self) -> list[Window]:
+        """Every complete chunk window currently extractable."""
+        spec, C = self.spec, self.chunk_frames
+        ck = C * spec.f                          # kept stages per chunk
+        need = spec.v1 + ck + spec.v2            # full decode window
+        out = []
+        while self._buf.shape[0] >= need:
+            out.append(Window(self._buf[:need], C, ck))
+            self._buf = self._buf[ck:]           # keep next chunk's v1 lead
+            self.n_out += ck
+        return out
+
+    def _stage_raw_tail(self):
+        """Flush-time prelude: convert any leftover raw punctured symbols
+        (including a partly-filled final stage) into buffered stages."""
+        if self.rate != "1/2" and self._raw.size:
+            staged = self._depuncture(final=True)
+            if staged.size:
+                self._buf = np.concatenate([self._buf, staged])
+                self.n_in += staged.shape[0]
+
+    def flush_window(self) -> Window | None:
+        """The zero-padded final partial chunk (frame_llr's edge padding)
+        as ONE window of ceil(tail/f) frames — possibly more than
+        ``chunk_frames`` when the last chunk was only missing its v2
+        right context. None when every pushed stage is already covered.
+        Resets nothing — call ``reset`` to reuse the context."""
+        self._stage_raw_tail()
+        spec = self.spec
+        tail = self.n_in - self.n_out            # stages not yet windowed
+        if tail <= 0:
+            return None
+        nframes = -(-tail // spec.f)
+        need = spec.v1 + nframes * spec.f + spec.v2
+        window = self._buf
+        if window.shape[0] < need:
+            pad = np.zeros((need - window.shape[0], self.beta), np.float32)
+            window = np.concatenate([window, pad])
+        self.n_out += tail
+        return Window(window[:need], nframes, tail)
+
+    def flush_chunks(self) -> list[Window]:
+        """Flush for the serve layer: the tail as a SEQUENCE of full
+        ``chunk_frames`` windows (zero-padded at the stream end), each
+        carrying its share of ``n_bits`` — so a bucket keeps its one
+        window geometry no matter how long the tail is (it can exceed one
+        chunk by up to v2-1 stages of missing right context). The windows
+        decode bit-identically to flush_window's single window: frame m's
+        decode region depends only on the zero-extended stream."""
+        self._stage_raw_tail()
+        spec, C = self.spec, self.chunk_frames
+        tail = self.n_in - self.n_out
+        if tail <= 0:
+            return []
+        ck = C * spec.f
+        nwin = -(-tail // ck)
+        need = spec.v1 + nwin * ck + spec.v2
+        if self._buf.shape[0] < need:
+            pad = np.zeros((need - self._buf.shape[0], self.beta),
+                           np.float32)
+            self._buf = np.concatenate([self._buf, pad])
+        out = []
+        for _ in range(nwin):
+            n_bits = min(ck, tail)
+            out.append(Window(self._buf[:spec.v1 + ck + spec.v2], C, n_bits))
+            self._buf = self._buf[ck:]
+            tail -= n_bits
+            self.n_out += n_bits
+        return out
 
 
 class StreamDecoder:
@@ -45,56 +258,49 @@ class StreamDecoder:
     push() returns the bits whose chunks have *completed* (possibly an
     empty array — results trail the dispatch front by ``depth`` chunks);
     flush() decodes the zero-padded tail and drains everything pending.
-    The instance is reusable after flush(). Feed depunctured (m, beta)
-    soft symbols (for punctured rates, depuncture before pushing — the
-    pattern alignment is stream-global, not per-chunk).
+    The instance is reusable after flush(). Feed (m, beta) soft symbols,
+    or — for punctured rates — the raw punctured symbol stream (the
+    context depunctures in-stream; see StreamContext).
     """
 
-    def __init__(self, cfg: DecoderConfig, decode_frames, chunk_frames: int,
-                 depth: int = 1):
+    def __init__(self, cfg: DecoderConfig, chunk_frames: int, *,
+                 depth: int = 1, mesh=None, decode_frames=None, cache=None):
         assert chunk_frames > 0 and depth >= 0
         self.cfg = cfg
         self.spec = cfg.spec
         self.beta = cfg.trellis.beta
         self.chunk_frames = chunk_frames
         self.depth = depth                      # chunks left in flight
-        self._decode_frames = decode_frames
-        self._decoders = {}                     # nframes -> jitted window fn
-        self._reset()
-
-    def _reset(self):
-        v1 = self.spec.v1
-        # the buffer holds [next_chunk_start - v1, ...); the stream start
-        # gets the same zero left-context frame_llr would pad with
-        self._buf = np.zeros((v1, self.beta), np.float32)
+        self.mesh = mesh
+        self._decode_frames = decode_frames     # explicit override only
+        self._local_fns = {}                    # override path: per-instance
+        if cache is None:
+            from ..serve.plan_cache import PLAN_CACHE as cache
+        self._cache = cache
+        self._ctx = StreamContext(cfg.spec, self.beta, chunk_frames, cfg.rate)
         self._inflight = collections.deque()    # (device_array, n_bits)
-        self._n_in = 0                          # stages pushed
-        self._n_disp = 0                        # bits dispatched
 
     def _window_decoder(self, nframes: int):
-        """Jitted window -> bits for a chunk of ``nframes`` frames (cached
-        per length on the instance: every full chunk shares one
-        compilation; flush tails compile once per distinct tail length)."""
-        if nframes in self._decoders:
-            return self._decoders[nframes]
-        spec = self.spec
-        L, f = spec.frame_len, spec.f
-        decode_frames = self._decode_frames
+        """Jitted window -> bits for a chunk of ``nframes`` frames. Comes
+        from the process-global plan cache — every StreamDecoder (and
+        serve bucket) of the same (trellis, spec, plan, nframes) shares
+        ONE compilation; flush tails compile once per distinct length. An
+        explicit decode_frames override has no cacheable identity, so it
+        is memoized per instance instead (one compile per length, as
+        before the cache existed)."""
+        if self._decode_frames is not None:
+            fn = self._local_fns.get(nframes)
+            if fn is None:
+                from ..serve.plan_cache import build_window_fn
+                fn = build_window_fn(self.cfg.spec, self._decode_frames,
+                                     nframes)
+                self._local_fns[nframes] = fn
+            return fn
+        return self._cache.window_decoder(self.cfg, nframes, mesh=self.mesh)
 
-        @jax.jit
-        def run(window):                        # (v1 + nframes*f + v2, beta)
-            starts = jnp.arange(nframes) * f
-            idx = starts[:, None] + jnp.arange(L)[None, :]
-            frames = window[idx]                # (nframes, L, beta)
-            return decode_frames(frames).reshape(-1)
-
-        self._decoders[nframes] = run
-        return run
-
-    def _dispatch(self, window: np.ndarray, nframes: int, n_bits: int):
-        bits = self._window_decoder(nframes)(jnp.asarray(window))
-        self._inflight.append((bits, n_bits))
-        self._n_disp += n_bits
+    def _dispatch(self, w: Window):
+        bits = self._window_decoder(w.nframes)(jnp.asarray(w.window))
+        self._inflight.append((bits, w.n_bits))
 
     def _drain(self, leave: int) -> list[np.ndarray]:
         out = []
@@ -104,19 +310,12 @@ class StreamDecoder:
         return out
 
     def push(self, llr) -> np.ndarray:
-        """Feed (m, beta) (or flat (m*beta,)) soft symbols; returns the
-        decoded bits of every chunk that has completed so far."""
-        llr = np.asarray(llr, np.float32).reshape(-1, self.beta)
-        self._n_in += llr.shape[0]
-        self._buf = np.concatenate([self._buf, llr]) if llr.size \
-            else self._buf
-        spec, C = self.spec, self.chunk_frames
-        ck = C * spec.f                          # kept stages per chunk
-        need = spec.v1 + ck + spec.v2            # full decode window
+        """Feed soft symbols; returns the decoded bits of every chunk that
+        has completed so far."""
+        self._ctx.append(llr)
         out = []
-        while self._buf.shape[0] >= need:
-            self._dispatch(self._buf[:need], C, ck)
-            self._buf = self._buf[ck:]           # keep next chunk's v1 lead
+        for w in self._ctx.take_windows():
+            self._dispatch(w)
             out.extend(self._drain(self.depth))
         return (np.concatenate(out) if out
                 else np.zeros((0,), np.int32))
@@ -124,25 +323,18 @@ class StreamDecoder:
     def flush(self) -> np.ndarray:
         """Decode the zero-padded tail, drain all in-flight chunks, and
         reset for the next stream. Returns the remaining decoded bits."""
-        spec = self.spec
-        tail = self._n_in - self._n_disp         # stages not yet dispatched
-        if tail > 0:
-            nframes = -(-tail // spec.f)
-            need = spec.v1 + nframes * spec.f + spec.v2
-            window = self._buf
-            if window.shape[0] < need:           # frame_llr's edge padding
-                pad = np.zeros((need - window.shape[0], self.beta),
-                               np.float32)
-                window = np.concatenate([window, pad])
-            self._dispatch(window[:need], nframes, tail)
+        w = self._ctx.flush_window()
+        if w is not None:
+            self._dispatch(w)
         out = self._drain(0)
-        self._reset()
+        self._ctx.reset()
         return (np.concatenate(out) if out
                 else np.zeros((0,), np.int32))
 
 
 def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
-                        mesh=None, depth: int = 1) -> StreamDecoder:
+                        mesh=None, depth: int = 1,
+                        cache=None) -> StreamDecoder:
     """Build a StreamDecoder for ``cfg``.
 
     chunk_frames: frames per chunk; default comes from
@@ -153,6 +345,7 @@ def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
       across the mesh devices.
     depth: chunks allowed in flight behind the dispatch front (1 = classic
       double buffering; 0 = synchronous, for debugging).
+    cache: plan cache override (default: the process-global PLAN_CACHE).
     """
     num_devices = int(mesh.devices.size) if mesh is not None else 1
     if chunk_frames is None:
@@ -163,30 +356,26 @@ def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
             bm_dtype=cfg.bm_dtype, layout=cfg.layout,
             num_devices=num_devices)
         chunk_frames = plan.chunk_frames
-    if mesh is not None:
-        from ..distributed.stream import make_sharded_frame_decoder
-        decode_frames = make_sharded_frame_decoder(cfg, mesh)
-    else:
-        decode_frames = make_frame_decoder(cfg)
-    return StreamDecoder(cfg, decode_frames, chunk_frames, depth)
+    return StreamDecoder(cfg, chunk_frames, depth=depth, mesh=mesh,
+                         cache=cache)
 
 
 def stream_decode(cfg: DecoderConfig, llr, n: int | None = None, *,
                   chunk_frames: int | None = None, mesh=None,
                   push_size: int | None = None) -> np.ndarray:
     """Convenience one-call wrapper: stream ``llr`` through a
-    StreamDecoder in ``push_size``-stage pushes and return the first n
+    StreamDecoder in ``push_size``-sized pushes and return the first n
     bits — bit-identical to ``make_decoder(cfg)(llr, n)``. Like
-    make_decoder, a punctured-rate cfg takes the punctured symbol stream
-    (and needs ``n``); it is depunctured up front because the pattern
-    alignment is stream-global."""
+    make_decoder, a punctured-rate cfg takes the raw punctured symbol
+    stream (and needs ``n``); it is depunctured in-stream by the decoder's
+    StreamContext (push_size then counts raw symbols)."""
     llr = np.asarray(llr, np.float32)
     if cfg.rate != "1/2":
         if n is None:
             raise ValueError("n is required for punctured rates")
-        from .puncture import depuncture
-        llr = np.asarray(depuncture(jnp.asarray(llr.reshape(-1)),
-                                    cfg.rate, n))
+        llr = llr.reshape(-1)                    # raw punctured symbols
+    else:
+        llr = llr.reshape(-1, cfg.trellis.beta)
     if n is None:
         n = llr.shape[0]
     dec = make_stream_decoder(cfg, chunk_frames=chunk_frames, mesh=mesh)

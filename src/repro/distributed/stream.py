@@ -13,6 +13,12 @@ The per-device VMEM budget of the tile plan is unchanged by sharding —
 every device runs its own grid over its own frame shard — which is why
 ``plan_decode(num_devices=...)`` scales only the chunk geometry, not the
 tile footprint.
+
+The multi-tenant serve layer rides the same path: a ``DecodeServer``
+built with ``mesh=...`` decodes each bucket's ``slots x chunk_frames``
+batch through this sharded decoder (the batch IS the frame axis), and the
+compiled-plan cache (serve/plan_cache.py) memoizes one sharded closure
+per (cfg, mesh) so bucket churn re-uses the shard_map trace too.
 """
 from __future__ import annotations
 
@@ -38,8 +44,9 @@ def make_sharded_frame_decoder(cfg: DecoderConfig, mesh: Mesh | None = None):
 
     F is padded up to a multiple of the mesh size (padding frames decode
     garbage from zero LLRs and are dropped before returning). Each shard
-    runs the ordinary per-device frame decoder, so every cfg backend —
-    reference, unified kernel, split kernel — shards identically.
+    runs the ordinary per-device frame decoder (the cache-shared closure
+    from make_frame_decoder), so every cfg backend — reference, unified
+    kernel, split kernel — shards identically.
     """
     mesh = mesh if mesh is not None else frame_mesh()
     local = make_frame_decoder(cfg)

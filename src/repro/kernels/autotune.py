@@ -42,11 +42,18 @@ from .packing import Layout, packed_width
 
 __all__ = ["TilePlan", "DecodePlan", "mosaic_padded_bytes",
            "unified_vmem_bytes", "split_vmem_bytes", "plan_tiles",
-           "plan_decode", "DEFAULT_VMEM_BUDGET", "CANDIDATE_TILES"]
+           "plan_decode", "DEFAULT_VMEM_BUDGET", "CANDIDATE_TILES",
+           "MAX_FRAMES_PER_TILE"]
 # (subframe-geometry validation lives on FrameSpec.validate itself)
 
 DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024          # bytes, per grid step
-CANDIDATE_TILES = (8, 16, 32, 64, 128, 256)    # powers of two >= 1 sublane
+#: Hard ceiling on tile candidates. The old 256 cap (ROADMAP open item) is
+#: lifted: candidates are generated from the budget up to the frame count —
+#: the footprint models are linear in FT, so the loop in plan_tiles stops
+#: at the budget long before this backstop on any realistic budget.
+MAX_FRAMES_PER_TILE = 4096
+CANDIDATE_TILES = tuple(8 << i for i in
+                        range((MAX_FRAMES_PER_TILE // 8).bit_length()))
 
 _BM_ITEMSIZE = {"float32": 4, "bfloat16": 2}
 
@@ -89,6 +96,14 @@ class TilePlan:
 
     def utilization(self) -> float:
         return self.vmem_bytes / self.budget
+
+    def cache_key(self) -> tuple:
+        """The knobs that select a distinct compiled kernel — the tile's
+        contribution to the compiled-plan cache key (serve.plan_cache).
+        Footprint/budget bookkeeping is deliberately excluded: two plans
+        that picked the same knobs compile to the same kernel."""
+        return (self.kernel, int(self.frames_per_tile),
+                Layout(self.layout).value, str(self.bm_dtype))
 
 
 def _geometry(spec: FrameSpec):
@@ -217,8 +232,13 @@ def plan_tiles(trellis: Trellis, spec: FrameSpec, *,
 
     Returns the largest candidate tile that fits ``vmem_budget``; the
     smallest candidate is returned even when over budget (the kernel still
-    runs — headroom just shrinks). ``max_frames`` caps the tile near the
-    actual frame count so short streams don't decode mostly padding.
+    runs — headroom just shrinks). Candidates are powers of two generated
+    from the budget up to the frame count: growth stops at the first
+    over-budget tile, ``max_frames`` caps the tile near the actual frame
+    count so short streams don't decode mostly padding, and only the
+    MAX_FRAMES_PER_TILE backstop bounds an effectively unlimited budget
+    (the 256 cap of PR 1 is gone — sublane plans beyond 256 frames are
+    real configurations at larger budgets).
     ``unified=False`` budgets the split (forward-only) kernel's footprint.
     """
     spec.validate()
@@ -272,13 +292,30 @@ class DecodePlan:
                     layout=self.tile.layout.value,
                     bm_dtype=self.tile.bm_dtype)
 
+    def cache_key(self) -> tuple:
+        """Stable, hashable identity of the full plan: everything that
+        changes the compiled decode (kernel knobs) or the launch geometry
+        (chunk sizing across devices). Together with (trellis, spec,
+        nframes) this keys the compiled-plan cache and the serve layer's
+        session buckets."""
+        return (*self.tile.cache_key(), bool(self.pack_survivors),
+                int(self.radix), int(self.chunk_frames),
+                int(self.num_devices))
+
+    def fingerprint(self) -> str:
+        """Short hex digest of cache_key() — a human-greppable bucket id
+        for metrics rows and benchmark records."""
+        import hashlib
+        return hashlib.sha1(repr(self.cache_key()).encode()).hexdigest()[:10]
+
 
 def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
                 pack_survivors: bool = True, radix: int = 4,
                 bm_dtype: str = "float32", layout="auto",
                 vmem_budget: int = DEFAULT_VMEM_BUDGET, num_devices: int = 1,
                 chunk_frames: int | None = None,
-                max_frames: int | None = None) -> DecodePlan:
+                max_frames: int | None = None,
+                frames_per_tile: int | None = None) -> DecodePlan:
     """Plan the whole decode: kernel, layout, tile, and chunk geometry.
 
     ``layout='auto'`` evaluates both layouts under mosaic (hardware-padded)
@@ -287,8 +324,22 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
     FT x S lane transpose wins only when tiles are small enough that
     frames cannot fill the 128 lanes. ``chunk_frames`` defaults to two
     tiles per device so the streaming front-end can double-buffer.
+    ``frames_per_tile`` pins the tile instead of autotuning it (the serve
+    layer passes a session's explicit knob through here so the plan — and
+    its padding accounting — matches the kernel that actually launches).
     """
-    if layout == "auto":
+    if frames_per_tile is not None:
+        spec.validate()
+        lay, mosaic = _resolve(
+            Layout.SUBLANE if layout == "auto" else layout, None)
+        model = unified_vmem_bytes if unified else split_vmem_bytes
+        total, breakdown = model(
+            trellis, spec, frames_per_tile, pack_survivors=pack_survivors,
+            radix=radix, layout=lay, bm_dtype=bm_dtype, mosaic=mosaic)
+        tile = TilePlan(int(frames_per_tile), total, breakdown, vmem_budget,
+                        "unified" if unified else "split", lay,
+                        str(bm_dtype), mosaic)
+    elif layout == "auto":
         plans = [plan_tiles(trellis, spec, pack_survivors=pack_survivors,
                             radix=radix, vmem_budget=vmem_budget,
                             max_frames=max_frames, unified=unified,

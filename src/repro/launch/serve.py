@@ -1,4 +1,10 @@
-"""Batched serving driver: continuous-batching-style loop.
+"""Batched LM serving driver: continuous-batching-style loop.
+
+NOTE: this module is the LANGUAGE-MODEL scaffolding demo — it serves
+transformer text generation, not convolutional-code decoding. The
+multi-tenant *Viterbi* decode service (session scheduler, bucketed
+batching, compiled-plan cache) lives in ``repro.serve``; see
+examples/serve_viterbi.py.
 
 Requests arrive with different prompt lengths; the server prefills each
 prompt (teacher-forced forward), then decodes all live requests in ONE

@@ -1,0 +1,18 @@
+"""Multi-tenant Viterbi decode service (continuous batching for receivers).
+
+``DecodeServer`` aggregates many independent, heterogeneous LLR streams
+into the large frame batches where the Pallas kernels' throughput lives;
+``plan_cache.PLAN_CACHE`` is the process-global compiled-plan cache shared
+with the stream and pipeline layers. (The LM-serving demo in
+``repro.launch.serve`` / ``examples/serve_lm.py`` is unrelated scaffolding
+for the transformer side of this repo — THIS package is the Viterbi
+service.)
+"""
+from .plan_cache import PLAN_CACHE, PlanCache          # noqa: F401
+from .metrics import BucketMetrics, ServeMetrics       # noqa: F401
+from .scheduler import Bucket, Session, bucket_plan    # noqa: F401
+from .server import Backpressure, DecodeServer, ServerFull  # noqa: F401
+
+__all__ = ["DecodeServer", "ServerFull", "Backpressure", "PlanCache",
+           "PLAN_CACHE", "ServeMetrics", "BucketMetrics", "Bucket",
+           "Session", "bucket_plan"]

@@ -1,0 +1,102 @@
+"""Per-bucket serving metrics: latency percentiles and batch occupancy.
+
+The serve layer's whole reason to exist is batch occupancy — the kernels
+only hit their throughput at high frame counts per launch — so the
+metrics are organized around the launch: how many frames of each batched
+launch carried live session data vs padding, and how long each window
+waited between enqueue (push) and materialized bits. Latencies are plain
+host wall-clock samples; percentiles are computed on demand so recording
+stays O(1) per window.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+__all__ = ["BucketMetrics", "ServeMetrics", "percentile", "LATENCY_SAMPLES"]
+
+#: Latency samples retained per bucket (rolling window — a long-running
+#: server keeps O(1) memory; percentiles describe recent traffic).
+LATENCY_SAMPLES = 4096
+
+
+def percentile(samples, p: float) -> float:
+    """p-th percentile of ``samples`` (0.0 when empty)."""
+    if not len(samples):
+        return 0.0
+    return float(np.percentile(np.asarray(samples, np.float64), p))
+
+
+@dataclasses.dataclass
+class BucketMetrics:
+    """Counters for one session bucket (one compiled plan)."""
+    bucket: str                       # plan fingerprint / display id
+    launches: int = 0
+    windows: int = 0                  # live windows decoded
+    frames: int = 0                   # live frames decoded
+    pad_frames: int = 0               # padding frames launched
+    bits: int = 0                     # real bits returned to sessions
+    latency_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_SAMPLES))
+
+    def record_launch(self, live_frames: int, pad_frames: int, windows: int,
+                      bits: int, window_latency_ms) -> None:
+        self.launches += 1
+        self.frames += live_frames
+        self.pad_frames += pad_frames
+        self.windows += windows
+        self.bits += bits
+        self.latency_ms.extend(float(t) for t in window_latency_ms)
+
+    @property
+    def occupancy(self) -> float:
+        """Live fraction of launched frames (1.0 = perfectly packed)."""
+        total = self.frames + self.pad_frames
+        return self.frames / total if total else 0.0
+
+    def p50_ms(self) -> float:
+        return percentile(self.latency_ms, 50)
+
+    def p99_ms(self) -> float:
+        return percentile(self.latency_ms, 99)
+
+    def snapshot(self) -> dict:
+        """JSON-ready row (benchmarks/trajectory 'serve' section shape)."""
+        return {"bucket": self.bucket, "launches": self.launches,
+                "windows": self.windows, "frames": self.frames,
+                "pad_frames": self.pad_frames, "bits": self.bits,
+                "occupancy": round(self.occupancy, 4),
+                "p50_ms": round(self.p50_ms(), 3),
+                "p99_ms": round(self.p99_ms(), 3)}
+
+
+class ServeMetrics:
+    """All buckets of one DecodeServer."""
+
+    def __init__(self):
+        self._buckets: dict[str, BucketMetrics] = {}
+
+    def bucket(self, bucket_id: str) -> BucketMetrics:
+        m = self._buckets.get(bucket_id)
+        if m is None:
+            m = self._buckets[bucket_id] = BucketMetrics(bucket_id)
+        return m
+
+    def __iter__(self):
+        return iter(self._buckets.values())
+
+    def snapshot(self) -> list[dict]:
+        return [m.snapshot() for m in self._buckets.values()]
+
+    def totals(self) -> dict:
+        lat = [t for m in self for t in m.latency_ms]
+        frames = sum(m.frames for m in self)
+        pad = sum(m.pad_frames for m in self)
+        return {"launches": sum(m.launches for m in self),
+                "windows": sum(m.windows for m in self),
+                "frames": frames, "pad_frames": pad,
+                "bits": sum(m.bits for m in self),
+                "occupancy": frames / (frames + pad) if frames + pad else 0.0,
+                "p50_ms": percentile(lat, 50), "p99_ms": percentile(lat, 99)}

@@ -1,0 +1,130 @@
+"""Session and bucket bookkeeping for the decode service.
+
+A **session** is one tenant: a code configuration plus an unbounded LLR
+stream, carried by a ``core.stream.StreamContext`` (rolling v1/v2 overlap
+buffer, stream-global depuncture phase). A **bucket** groups live
+sessions whose windows can share one batched kernel launch: same trellis,
+same frame spec, same compiled plan (``DecodePlan.cache_key()``), same
+backend/interpret/mesh. The puncture rate is deliberately NOT part of the
+bucket key — depuncturing happens per-session inside the context, so a
+rate-1/2 and a rate-3/4 tenant of the same trellis/spec decode in the
+same launch.
+
+Scheduling is FIFO over each bucket's window queue (arrival order ==
+round-robin when sessions push at similar rates); the server pops up to
+``slots`` windows per bucket per step and pads the rest of the fixed
+``slots * chunk_frames`` batch with zero frames.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.pipeline import DecoderConfig
+from ..core.stream import StreamContext, Window
+from ..kernels.autotune import DecodePlan, plan_decode
+
+__all__ = ["PendingWindow", "Session", "Bucket", "bucket_plan"]
+
+
+def bucket_plan(cfg: DecoderConfig, num_devices: int = 1,
+                chunk_frames: int | None = None) -> DecodePlan:
+    """The DecodePlan a session of ``cfg`` buckets under — same planning
+    call the single-stream front-end uses, so a server session chunks
+    exactly like its ``stream_decode`` baseline."""
+    pinned = (cfg.frames_per_tile
+              if isinstance(cfg.frames_per_tile, int) else None)
+    return plan_decode(
+        cfg.trellis, cfg.spec, unified=cfg.backend != "kernel_split",
+        pack_survivors=cfg.pack_survivors, radix=cfg.radix,
+        bm_dtype=cfg.bm_dtype, layout=cfg.layout, num_devices=num_devices,
+        chunk_frames=chunk_frames, frames_per_tile=pinned)
+
+
+@dataclasses.dataclass
+class PendingWindow:
+    """One chunk window queued for a batched launch."""
+    session: "Session"
+    frames: np.ndarray            # (chunk_frames, L, beta) float32
+    n_bits: int                   # real bits (tail windows carry padding)
+    t_enq: float                  # perf_counter at enqueue (latency metric)
+
+
+@dataclasses.dataclass
+class Session:
+    """One tenant stream and its decoded-output queue."""
+    sid: int
+    cfg: DecoderConfig
+    ctx: StreamContext
+    bucket: "Bucket"
+    inflight: int = 0             # windows queued, not yet decoded
+    ready: list = dataclasses.field(default_factory=list)
+    closed: bool = False
+
+    def _enqueue(self, w: Window) -> None:
+        assert w.nframes == self.bucket.chunk_frames    # one bucket geometry
+        self.bucket.queue.append(
+            PendingWindow(self, w.frames(self.cfg.spec), w.n_bits,
+                          time.perf_counter()))
+        self.inflight += 1
+
+    def absorb(self, llr) -> int:
+        """Feed raw input through the context; queue every completed
+        window on the bucket. Returns windows queued."""
+        self.ctx.append(llr)
+        windows = self.ctx.take_windows()
+        for w in windows:
+            self._enqueue(w)
+        return len(windows)
+
+    def finish(self) -> int:
+        """Queue the zero-padded tail as full-chunk windows (the tail can
+        exceed one chunk by up to v2-1 stages of missing right context —
+        flush_chunks splits it losslessly). Returns windows queued."""
+        windows = self.ctx.flush_chunks()
+        for w in windows:
+            self._enqueue(w)
+        return len(windows)
+
+    def take_ready(self) -> np.ndarray:
+        out = (np.concatenate(self.ready) if self.ready
+               else np.zeros((0,), np.int32))
+        self.ready.clear()
+        return out
+
+
+class Bucket:
+    """Live sessions sharing one compiled plan — and one launch per step."""
+
+    def __init__(self, key, cfg: DecoderConfig, plan: DecodePlan):
+        self.key = key
+        self.plan = plan
+        self.chunk_frames = plan.chunk_frames
+        # the decode identity strips the rate: depuncture is per-session
+        # upstream, so every rate shares this bucket's compiled decoders
+        self.decode_cfg = dataclasses.replace(cfg, rate="1/2")
+        self.sessions: set[int] = set()
+        self.queue: collections.deque[PendingWindow] = collections.deque()
+        self.inflight: collections.deque = collections.deque()  # launches
+        self.id = (f"K{cfg.trellis.k}-f{cfg.spec.f}-"
+                   f"C{self.chunk_frames}-{plan.fingerprint()}")
+
+    def tile_pad(self, batch_frames: int) -> int:
+        """Frames of tile padding a launch of ``batch_frames`` pays: the
+        kernel wrappers round the frame axis up to the plan's tile
+        (ops._pad_frames); the reference backend vmaps exactly."""
+        if self.decode_cfg.backend == "reference":
+            return 0
+        ft = self.plan.frames_per_tile
+        return -(-batch_frames // ft) * ft - batch_frames
+
+    def take(self, max_windows: int) -> list[PendingWindow]:
+        out = []
+        while self.queue and len(out) < max_windows:
+            w = self.queue.popleft()
+            w.session.inflight -= 1
+            out.append(w)
+        return out

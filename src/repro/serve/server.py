@@ -1,0 +1,240 @@
+"""DecodeServer: a multi-tenant, slot-based Viterbi decode service.
+
+Continuous-batching for receivers instead of language models: sessions
+(each a code config + an unbounded LLR stream) are admitted into the
+server, grouped into buckets by (trellis, spec, compiled plan), and each
+``step()`` packs up to ``slots`` pending chunk windows per bucket into
+ONE batched kernel launch (partial batches are padded to the plan's tile
+multiple inside the kernel wrapper — ``chunk_frames`` is already a tile
+multiple, so a full-slot launch pads nothing). Per-session bits come
+back bit-identical to running that session
+alone through ``core.stream.stream_decode``: frames decode independently,
+and the per-session chunking/flush geometry is exactly the single-stream
+context's.
+
+The compiled-plan cache (plan_cache.PLAN_CACHE by default) guarantees
+tenant churn never re-compiles: one trace per (trellis, spec, plan,
+batch-nframes) bucket for the lifetime of the process.
+
+Flow control is explicit and synchronous:
+
+  * admission — ``open_session`` raises ``ServerFull`` beyond
+    ``max_sessions`` live sessions;
+  * backpressure — ``push`` raises ``Backpressure`` once a session has
+    ``queue_depth`` windows pending (call ``step()`` to drain, then
+    retry);
+  * ``step()`` runs one launch per bucket with pending work; ``poll``
+    collects a session's decoded bits; ``close_session`` flushes the
+    tail, drains, and frees the slot.
+
+With ``mesh=...`` every bucket's batch is sharded across the mesh's
+devices (distributed/stream.py) — the batch is the frame axis, so the
+scale-out story of the single stream carries over unchanged.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.pipeline import DecoderConfig
+from ..core.stream import StreamContext
+from .metrics import ServeMetrics
+from .plan_cache import PLAN_CACHE, PlanCache
+from .scheduler import Bucket, Session, bucket_plan
+
+__all__ = ["DecodeServer", "ServerFull", "Backpressure"]
+
+
+class ServerFull(RuntimeError):
+    """Admission refused: the server is at max_sessions live sessions."""
+
+
+class Backpressure(RuntimeError):
+    """Push refused: the session already has queue_depth windows pending.
+
+    The caller should drive ``step()`` (or ``drain()``) and retry."""
+
+
+class DecodeServer:
+    """Slot-based batching decode service over heterogeneous sessions.
+
+    slots:        max windows batched per bucket per step. A steady-state
+                  full bucket launches ``slots * chunk_frames`` frames in
+                  one fixed shape — one compile per bucket, regardless of
+                  session churn (drain tails add at most one shape per
+                  distinct partial batch size, each compiled once).
+    max_sessions: admission limit over all buckets.
+    queue_depth:  per-session pending-window limit before Backpressure.
+    depth:        batched launches allowed in flight per bucket behind
+                  the dispatch front (1 = double buffering, as in
+                  StreamDecoder; 0 = synchronous, for debugging).
+    mesh:         optional 1-D 'frames' mesh — bucket batches are then
+                  sharded across its devices.
+    cache:        PlanCache override (default: process-global PLAN_CACHE).
+    """
+
+    def __init__(self, *, slots: int = 4, max_sessions: int = 64,
+                 queue_depth: int = 8, depth: int = 1, mesh=None,
+                 cache: PlanCache | None = None):
+        assert slots > 0 and max_sessions > 0 and queue_depth > 0
+        assert depth >= 0
+        self.slots = slots
+        self.max_sessions = max_sessions
+        self.queue_depth = queue_depth
+        self.depth = depth                    # launches left in flight
+        self.mesh = mesh
+        self.cache = cache if cache is not None else PLAN_CACHE
+        self.metrics = ServeMetrics()
+        self._sessions: dict[int, Session] = {}
+        self._buckets: dict[tuple, Bucket] = {}
+        self._next_sid = 0
+
+    # -- admission --------------------------------------------------------
+    @property
+    def num_sessions(self) -> int:
+        return len(self._sessions)
+
+    def open_session(self, cfg: DecoderConfig,
+                     chunk_frames: int | None = None) -> int:
+        """Admit one tenant; returns its session id. Sessions of the same
+        (trellis, spec, plan) — any puncture rate — share a bucket."""
+        if len(self._sessions) >= self.max_sessions:
+            raise ServerFull(
+                f"{len(self._sessions)} live sessions (max_sessions="
+                f"{self.max_sessions}); close one or raise the limit")
+        ndev = int(self.mesh.devices.size) if self.mesh is not None else 1
+        plan = bucket_plan(cfg, num_devices=ndev, chunk_frames=chunk_frames)
+        key = (cfg.trellis, cfg.spec, plan.cache_key(), cfg.backend,
+               cfg.interpret, self.mesh)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = Bucket(key, cfg, plan)
+        sid = self._next_sid
+        self._next_sid += 1
+        ctx = StreamContext(cfg.spec, cfg.trellis.beta, bucket.chunk_frames,
+                            cfg.rate)
+        session = Session(sid, cfg, ctx, bucket)
+        self._sessions[sid] = session
+        bucket.sessions.add(sid)
+        return sid
+
+    def _session(self, sid: int) -> Session:
+        try:
+            return self._sessions[sid]
+        except KeyError:
+            raise KeyError(f"no live session {sid}") from None
+
+    # -- data path --------------------------------------------------------
+    def push(self, sid: int, llr) -> None:
+        """Feed soft symbols (raw punctured stream for punctured-rate
+        sessions) into a session. Raises Backpressure — BEFORE absorbing
+        anything, so a retry is safe — when the session's pending windows
+        plus the windows this push would complete exceed queue_depth
+        (call step() to drain; a single push bigger than queue_depth
+        chunks must be split by the caller)."""
+        session = self._session(sid)
+        projected = session.ctx.projected_windows(
+            session.ctx.incoming_stages(llr))
+        if session.inflight + projected > self.queue_depth:
+            raise Backpressure(
+                f"session {sid}: {session.inflight} windows pending + "
+                f"{projected} in this push > queue_depth="
+                f"{self.queue_depth}; call step() and retry (or split "
+                f"pushes larger than queue_depth chunks)")
+        session.absorb(llr)
+
+    def step(self) -> int:
+        """One batched launch per bucket with pending windows, dispatched
+        through JAX's async runtime; results materialize ``depth``
+        launches behind the dispatch front (the same double buffering the
+        single-stream front-end uses), landing on each session's ready
+        queue. Returns the number of windows dispatched."""
+        done = 0
+        for bucket in self._buckets.values():
+            if bucket.queue:
+                done += self._launch(bucket)
+        return done
+
+    def _launch(self, bucket: Bucket) -> int:
+        """Dispatch one batched launch: up to ``slots`` windows ->
+        (k*C, L, beta) frames. The kernel pads the partial batch to the
+        plan's tile multiple internally (ops._pad_frames); that padding
+        is what the occupancy metric charges — a full-slot steady state
+        launches whole tiles only. Does NOT block: the oldest in-flight
+        launch beyond ``depth`` is materialized instead."""
+        taken = bucket.take(self.slots)
+        if not taken:
+            return 0
+        B = len(taken) * bucket.chunk_frames
+        batch = np.concatenate([w.frames for w in taken])
+        fn = self.cache.batch_decoder(bucket.decode_cfg, B, mesh=self.mesh)
+        bucket.inflight.append((fn(jnp.asarray(batch)), taken))
+        self._retire(bucket, self.depth)
+        return len(taken)
+
+    def _retire(self, bucket: Bucket, leave: int) -> int:
+        """Materialize in-flight launches down to ``leave`` (blocks on the
+        OLDEST only), distribute bits to sessions, record metrics."""
+        C, f = bucket.chunk_frames, bucket.decode_cfg.spec.f
+        done = 0
+        while len(bucket.inflight) > leave:
+            bits_dev, taken = bucket.inflight.popleft()
+            bits = np.asarray(bits_dev)                 # (k*C, f)
+            t_done = time.perf_counter()
+            n_bits = live = 0
+            for i, w in enumerate(taken):
+                out = bits[i * C:(i + 1) * C].reshape(-1)[:w.n_bits]
+                w.session.ready.append(out.astype(np.int32, copy=False))
+                n_bits += w.n_bits
+                live += min(C, -(-w.n_bits // f))       # real frames only
+            B = len(taken) * C
+            self.metrics.bucket(bucket.id).record_launch(
+                live_frames=live,                       # zero tail frames
+                pad_frames=B - live + bucket.tile_pad(B),  # count as pad
+                windows=len(taken), bits=n_bits,
+                window_latency_ms=[(t_done - w.t_enq) * 1e3 for w in taken])
+            done += len(taken)
+        return done
+
+    def drain(self) -> int:
+        """Dispatch until no bucket has pending windows, then materialize
+        every in-flight launch."""
+        done = 0
+        while any(b.queue for b in self._buckets.values()):
+            done += self.step()
+        for bucket in self._buckets.values():
+            self._retire(bucket, 0)
+        return done
+
+    def poll(self, sid: int) -> np.ndarray:
+        """Collect (and clear) a session's bits materialized so far —
+        non-blocking; results trail the dispatch front by up to ``depth``
+        launches (drain()/close_session force completion)."""
+        return self._session(sid).take_ready()
+
+    def close_session(self, sid: int) -> np.ndarray:
+        """Flush the session's tail, decode everything it still has
+        pending, free its slot, and return the remaining bits."""
+        session = self._session(sid)
+        session.finish()
+        while session.inflight:
+            self._launch(session.bucket)
+        self._retire(session.bucket, 0)
+        session.closed = True
+        session.bucket.sessions.discard(sid)
+        del self._sessions[sid]
+        return session.take_ready()
+
+    # -- introspection ----------------------------------------------------
+    def buckets(self) -> list[Bucket]:
+        return list(self._buckets.values())
+
+    def metrics_snapshot(self) -> dict:
+        """Per-bucket rows + totals + plan-cache stats, JSON-ready (the
+        shape the benchmarks' 'serve' section records)."""
+        return {"buckets": self.metrics.snapshot(),
+                "totals": self.metrics.totals(),
+                "plan_cache": self.cache.stats(),
+                "sessions": len(self._sessions)}

@@ -156,6 +156,59 @@ def test_plan_decode_full_plan():
     assert not ps.unified and ps.tile.kernel == "split"
 
 
+def test_candidates_lift_the_256_cap():
+    """The ROADMAP open item: candidates now grow from the budget up to
+    the frame count. At 8 MiB the packed sublane plan exceeds the old 256
+    cap; max_frames still picks the smallest covering candidate; the
+    MAX_FRAMES_PER_TILE backstop bounds an unlimited budget."""
+    from repro.kernels.autotune import MAX_FRAMES_PER_TILE
+    assert CANDIDATE_TILES[-1] == MAX_FRAMES_PER_TILE > 256
+    p = plan_tiles(STD_K7, SPEC, pack_survivors=True, radix=4,
+                   layout=Layout.SUBLANE, vmem_budget=8 * 1024 * 1024)
+    assert p.frames_per_tile == 512 > 256
+    assert p.vmem_bytes <= p.budget
+    p2 = plan_tiles(STD_K7, SPEC, pack_survivors=True, radix=4,
+                    layout=Layout.SUBLANE, vmem_budget=1 << 30,
+                    max_frames=300)
+    assert p2.frames_per_tile == 512          # smallest candidate >= 300
+
+
+def test_kernel_runs_beyond_256_frames_per_tile():
+    """A >256 sublane tile actually decodes, bit-exact vs the reference
+    (the plan space beyond the old cap is real, not just arithmetic)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.framed import FrameSpec, frame_llr
+    from repro.kernels import ops, ref
+    spec = FrameSpec(f=16, v1=8, v2=8)        # small L: 330 frames is cheap
+    rng = np.random.default_rng(0)
+    llr = jnp.asarray(rng.standard_normal((330 * 16, 2)).astype(np.float32))
+    frames = frame_llr(llr, spec)
+    want = np.asarray(ref.unified_decode_frames_ref(frames, STD_K7, spec))
+    got = np.asarray(ops.viterbi_decode_frames(
+        frames, STD_K7, spec, frames_per_tile=512, pack_survivors=True,
+        radix=4, layout="sublane", interpret=True))
+    assert np.array_equal(got, want)
+
+
+def test_plan_cache_key_and_pinned_tile():
+    """cache_key() is the serve layer's bucket identity: stable across
+    equal plans, sensitive to every knob; frames_per_tile= pins the tile
+    the session actually launches with (no autotuning surprise in the
+    padding accounting)."""
+    a = plan_decode(STD_K7, SPEC)
+    b = plan_decode(STD_K7, SPEC)
+    assert a.cache_key() == b.cache_key()
+    assert a.fingerprint() == b.fingerprint()
+    c = plan_decode(STD_K7, SPEC, radix=2)
+    assert a.cache_key() != c.cache_key()
+    d = plan_decode(STD_K7, SPEC, chunk_frames=7)
+    assert a.cache_key() != d.cache_key()
+    p = plan_decode(STD_K7, SPEC, layout="lane", frames_per_tile=8)
+    assert p.frames_per_tile == 8 and p.tile.layout is Layout.LANE
+    assert p.chunk_frames == 2 * 8            # chunk follows the pinned tile
+
+
 def test_geometry_validation_errors():
     """plan_tiles rejects broken subframe geometry with actionable errors
     (via FrameSpec.validate — one source of truth for the invariants)."""
