@@ -197,25 +197,16 @@ def streaming_bench(full: bool = False):
     return rows
 
 
-def serve_bench(full: bool = False):
-    """Multi-tenant serve trajectory: sessions x codes sweep.
-
-    8 (full: 16) concurrent sessions across three code configs — K=7
-    rate-1/2, K=7 rate-3/4 (raw punctured push), K=5 rate-1/2 — decoded
-    (a) by N independent StreamDecoders and (b) by one DecodeServer
-    batching each bucket's windows into single launches. Both run the
-    compiled reference backend on identical arrival patterns (one chunk
-    per session per round), so the delta is purely dispatch aggregation:
-    the server wins when one (slots*C)-frame launch beats `slots`
-    C-frame launches. Aggregate Mb/s is total decoded bits over wall
-    time; the server rows carry the per-bucket latency/occupancy metrics
-    and the plan-cache trace count (the serve acceptance criterion:
-    server >= independent, one compile per bucket shape).
-    """
-    from repro.core import DecoderConfig, make_stream_decoder
+def _serve_workload(full: bool):
+    """Session mix + pre-cut raw chunk streams shared by serve_bench and
+    serve_faults_bench: 8 (full: 16) sessions across three code configs —
+    K=7 rate-1/2, K=7 rate-3/4 (raw punctured push), K=5 rate-1/2 —
+    pushing one chunk per session per round. Returns
+    (streams, total_bits, nbuckets, C, nchunks, nsess) where streams is
+    [(cfg, [chunk0, chunk1, ...], n_bits), ...]."""
+    from repro.core import DecoderConfig
     from repro.core.puncture import PATTERNS
     from repro.core.trellis import make_trellis
-    from repro.serve import DecodeServer, PlanCache
 
     C = 16                                     # chunk frames per session
     nchunks = 24 if full else 6
@@ -247,6 +238,27 @@ def serve_bench(full: bool = False):
                               for i in range(nchunks)], n))
     total_bits = sum(n for _, _, n in streams)
     nbuckets = len({(cfg.trellis, cfg.spec) for cfg, _, _ in streams})
+    return streams, total_bits, nbuckets, C, nchunks, nsess
+
+
+def serve_bench(full: bool = False):
+    """Multi-tenant serve trajectory: sessions x codes sweep.
+
+    The _serve_workload mix decoded (a) by N independent StreamDecoders
+    and (b) by one DecodeServer batching each bucket's windows into
+    single launches. Both run the compiled reference backend on identical
+    arrival patterns (one chunk per session per round), so the delta is
+    purely dispatch aggregation: the server wins when one
+    (slots*C)-frame launch beats `slots` C-frame launches. Aggregate
+    Mb/s is total decoded bits over wall time; the server rows carry the
+    per-bucket latency/occupancy metrics and the plan-cache trace count
+    (the serve acceptance criterion: server >= independent, one compile
+    per bucket shape).
+    """
+    from repro.core import make_stream_decoder
+    from repro.serve import DecodeServer, PlanCache
+
+    streams, total_bits, nbuckets, C, nchunks, nsess = _serve_workload(full)
 
     def run_independent():
         decs = [make_stream_decoder(cfg, chunk_frames=C)
@@ -309,6 +321,71 @@ def serve_bench(full: bool = False):
                  "launches": tot["launches"],
                  "plan_traces": cache.stats()["traces"]})
     return rows
+
+
+def serve_faults_bench(full: bool = False):
+    """Serve throughput under injected launch faults (the
+    'serve_under_faults' trajectory section).
+
+    Same workload and server geometry as serve_bench's "server" variant,
+    with a seeded FaultInjector raising a kernel exception on 1% of
+    launches plus every 16th deterministically (the `every` term
+    guarantees the retry path actually runs in the quick CI workload,
+    where 1% of ~20 launches would usually round to zero). Every failed
+    launch is retried with zero backoff on the warm plan cache, so the
+    row measures the price of fault recovery itself: dispatch + failed
+    attempt + redispatch. The run must still deliver every bit. The
+    regression gate tracks this row's mbps like the clean serve row.
+    """
+    from repro.serve import DecodeServer, PlanCache
+    from repro.testing import FaultInjector, FaultSpec
+
+    streams, total_bits, nbuckets, C, nchunks, nsess = _serve_workload(full)
+    cache = PlanCache()
+
+    def run_server(faults):
+        srv = DecodeServer(slots=4, max_sessions=2 * nsess, cache=cache,
+                           max_retries=3, backoff_s=0.0, faults=faults)
+        sids = [srv.open_session(cfg, chunk_frames=C)
+                for cfg, _, _ in streams]
+        got = 0
+        for r in range(nchunks):
+            for sid, (_, chunks, _) in zip(sids, streams):
+                srv.push(sid, chunks[r])
+            while srv.step():
+                pass
+            for sid in sids:
+                got += srv.poll(sid).size
+        for sid in sids:
+            got += srv.close_session(sid).size
+        return got, srv
+
+    nbits, _ = run_server(None)                # warm/compile fault-free
+    assert nbits >= total_bits
+    best, srv, inj = float("inf"), None, None
+    for _ in range(3):
+        # fresh injector, same seed: identical fault schedule every rep
+        # (and every PR), so the mbps trajectory is comparable
+        faults = FaultInjector(
+            FaultSpec("launch_error", p=0.01, every=16), seed=11)
+        t0 = time.perf_counter()
+        nbits, this_srv = run_server(faults)
+        dt = time.perf_counter() - t0
+        assert nbits >= total_bits             # full recovery, always
+        if dt < best:
+            best, srv, inj = dt, this_srv, faults
+    tot = srv.metrics.totals()
+    assert tot["launch_errors"] == inj.injected["launch_error"]
+    return [{"table": "serve_faults", "variant": "server_faults",
+             "sessions": nsess, "codes": 3, "buckets": nbuckets,
+             "chunk_frames": C, "slots": 4, "n_bits": total_bits,
+             "reps": 3, "us_per_call": best * 1e6,
+             "mbps": total_bits / best / 1e6,
+             "injected": int(inj.injected["launch_error"]),
+             "launch_errors": tot["launch_errors"],
+             "retries": tot["retries"], "degraded": tot["degraded"],
+             "p99_ms": round(tot["p99_ms"], 3),
+             "health": tot["health"]}]
 
 
 def plan_rows():

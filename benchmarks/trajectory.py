@@ -19,7 +19,7 @@ SCHEMA = "kernel_sweep/v2"
 DEFAULT_PATH = "BENCH_kernels.json"
 
 __all__ = ["SCHEMA", "DEFAULT_PATH", "load_runs", "append_run", "best_mbps",
-           "serve_mbps"]
+           "serve_mbps", "serve_under_faults_mbps"]
 
 
 def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
@@ -63,3 +63,13 @@ def serve_mbps(run: dict, variant: str = "server") -> float:
     matching (sessions, n_bits) workloads."""
     return max((r["mbps"] for r in run.get("serve", [])
                 if r.get("variant") == variant), default=0.0)
+
+
+def serve_under_faults_mbps(run: dict) -> float:
+    """Aggregate serve throughput of a run's "serve_faults" section — the
+    DecodeServer workload with the seeded 1%-launch-failure injection
+    (throughput.serve_faults_bench). 0.0 when the run predates the
+    fault-tolerance trajectory; the gate compares rows across runs with
+    matching (sessions, n_bits) like the clean serve section."""
+    return max((r["mbps"] for r in run.get("serve_faults", [])
+                if r.get("variant") == "server_faults"), default=0.0)

@@ -10,6 +10,13 @@ stats (one trace per bucket shape, regardless of tenant churn).
 
   PYTHONPATH=src python examples/serve_viterbi.py --sessions 8 --chunks 6
 
+``--chaos`` reruns the same workload under a seeded fault schedule
+(repro.testing.faults): injected kernel-launch failures, slow launches
+tripping the per-launch deadline, forced plan-cache evictions, and one
+tenant pushing NaN-poisoned LLRs until it is quarantined. Healthy
+sessions must still verify bit-identical; the demo prints the per-bucket
+health and fault counters the server recovered through.
+
 (For the unrelated LM continuous-batching demo, see examples/serve_lm.py.)
 """
 import argparse
@@ -24,7 +31,8 @@ from repro.core.puncture import puncture
 from repro.core.stream import stream_decode
 from repro.core.trellis import make_trellis
 from repro.channel.sim import awgn, bpsk
-from repro.serve import Backpressure, DecodeServer, PlanCache
+from repro.serve import (Backpressure, DecodeServer, PlanCache,
+                         SessionQuarantined)
 
 
 def make_rx(trellis, n, rate, seed, snr=4.0):
@@ -43,6 +51,8 @@ def main(argv=None):
     ap.add_argument("--chunks", type=int, default=6, help="chunks/session")
     ap.add_argument("--chunk-frames", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run under a seeded fault-injection schedule")
     args = ap.parse_args(argv)
 
     k5 = make_trellis(5, (0o23, 0o35))
@@ -52,9 +62,22 @@ def main(argv=None):
             ("K7 r3/4", DecoderConfig(spec=spec34, rate="3/4")),
             ("K5 r1/2", DecoderConfig(trellis=k5, spec=spec12))]
 
+    faults = None
+    if args.chaos:
+        from repro.testing import FaultInjector, FaultSpec
+        # the LAST session is the poisoned tenant (sids count from 0)
+        faults = FaultInjector(
+            FaultSpec("launch_error", every=5),
+            FaultSpec("launch_slow", every=7, delay_s=0.05),
+            FaultSpec("plan_cache_miss", every=6),
+            FaultSpec("corrupt_llr", every=2, mode="nan",
+                      sessions=(args.sessions - 1,)),
+            seed=3)
     cache = PlanCache()
     srv = DecodeServer(slots=args.slots, max_sessions=args.sessions,
-                       queue_depth=4, cache=cache)
+                       queue_depth=4, cache=cache, faults=faults,
+                       launch_timeout_s=0.03 if args.chaos else None,
+                       max_retries=1, backoff_s=0.0, quarantine_after=2)
     tenants = []
     for i in range(args.sessions):
         name, cfg = cfgs[i % len(cfgs)]
@@ -64,45 +87,74 @@ def main(argv=None):
         per = rx.shape[0] // args.chunks
         tenants.append(dict(sid=sid, name=name, cfg=cfg, rx=rx, n=n,
                             chunks=[rx[j * per:(j + 1) * per]
-                                    for j in range(args.chunks)], out=[]))
+                                    for j in range(args.chunks)], out=[],
+                            quarantined=None))
     print(f"{args.sessions} sessions / {len(srv.buckets())} buckets, "
-          f"chunk={args.chunk_frames} frames, slots={args.slots}")
+          f"chunk={args.chunk_frames} frames, slots={args.slots}"
+          + (", CHAOS schedule on" if args.chaos else ""))
 
     t0 = time.perf_counter()
     for r in range(args.chunks):
         for t in tenants:
+            if t["quarantined"] is not None:
+                continue
             try:
                 srv.push(t["sid"], t["chunks"][r])
             except Backpressure:
                 srv.step()
                 srv.push(t["sid"], t["chunks"][r])
+            except SessionQuarantined as e:
+                t["quarantined"] = e
         while srv.step():
             pass
         for t in tenants:
-            t["out"].append(srv.poll(t["sid"]))
+            if t["quarantined"] is None:
+                try:
+                    t["out"].append(srv.poll(t["sid"]))
+                except SessionQuarantined as e:
+                    t["quarantined"] = e
     for t in tenants:
-        t["out"].append(srv.close_session(t["sid"]))
+        t["out"].append(srv.close_session(t["sid"]))  # quarantined too
     dt = time.perf_counter() - t0
 
     total = 0
+    poisoned_sids = set(faults._specs["corrupt_llr"][0].sessions) \
+        if args.chaos else set()
     for t in tenants:
+        if t["sid"] in poisoned_sids:
+            continue                      # its input WAS corrupted
         got = np.concatenate(t["out"])[:t["n"]]
         want = stream_decode(t["cfg"], t["rx"], t["n"],
                              chunk_frames=args.chunk_frames)
         assert np.array_equal(got, want), f"{t['name']} sid={t['sid']}"
         total += t["n"]
     print(f"decoded {total} bits in {dt*1e3:.0f} ms "
-          f"({total/dt/1e6:.2f} Mb/s aggregate) — every session "
+          f"({total/dt/1e6:.2f} Mb/s aggregate) — every healthy session "
           f"bit-identical to its solo stream_decode")
+    for t in tenants:
+        if t["quarantined"] is not None:
+            e = t["quarantined"]
+            print(f"quarantined: {t['name']} sid={e.sid} after "
+                  f"{e.strikes} poisoned pushes ({e.reason})")
 
     snap = srv.metrics_snapshot()
     print(f"{'bucket':<28}{'launches':>9}{'windows':>9}{'occup':>7}"
-          f"{'p50 ms':>8}{'p99 ms':>8}")
+          f"{'p50 ms':>8}{'p99 ms':>8}  {'health':<9}")
     for row in snap["buckets"]:
         print(f"{row['bucket']:<28}{row['launches']:>9}{row['windows']:>9}"
               f"{row['occupancy']:>7.2f}{row['p50_ms']:>8.1f}"
-              f"{row['p99_ms']:>8.1f}")
+              f"{row['p99_ms']:>8.1f}  {row['health']:<9}")
     print("plan cache:", snap["plan_cache"])
+    if args.chaos:
+        tot = snap["totals"]
+        print(f"faults recovered: {tot['launch_errors']} launch errors, "
+              f"{tot['timeouts']} timeouts, {tot['retries']} retries, "
+              f"{tot['degraded']} degraded launches, "
+              f"{tot['cache_refreshes']} cache refreshes, "
+              f"{tot['sanitized_values']} LLRs sanitized, "
+              f"{tot['quarantined']} quarantined — overall "
+              f"health={tot['health']}")
+        print("injector:", snap["faults"])
 
 
 if __name__ == "__main__":

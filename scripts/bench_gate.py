@@ -2,14 +2,21 @@
 """Benchmark-regression gate (scripts/ci.sh).
 
 Runs the interpret-mode kernel sweep + streaming bench + multi-tenant
-serve bench + tile-plan report, APPENDS the run to BENCH_kernels.json
-(keeping the per-PR trajectory), and fails when the best kernel
-configuration OR the serve aggregate throughput regresses more than
-``BENCH_GATE_TOL`` (default 20%) against the best comparable run already
-stored. Timing is min-of-reps, which absorbs most shared-runner noise; the
-tolerance absorbs the rest.
+serve bench + serve-under-faults bench + tile-plan report, APPENDS the
+run to BENCH_kernels.json (keeping the per-PR trajectory), and fails when
+the best kernel configuration OR the serve aggregate throughput (clean or
+under fault injection) regresses more than ``BENCH_GATE_TOL`` (default
+20%) against the best comparable run already stored. Timing is
+min-of-reps, which absorbs most shared-runner noise; the tolerance
+absorbs the rest.
 
   PYTHONPATH=src python scripts/bench_gate.py
+
+Failure modes are explicit, never tracebacks: a corrupt/unreadable
+trajectory file, or a benchmark returning an empty/missing section,
+prints ``bench gate: ERROR — ...`` and exits 2 (distinct from exit 1 =
+a real regression). A missing BENCH_kernels.json is NOT an error — the
+run is recorded as the first baseline.
 
 Env knobs: BENCH_GATE_TOL=0.2 (fractional regression allowed),
 BENCH_PATH=BENCH_kernels.json.
@@ -23,24 +30,79 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
+class GateError(Exception):
+    """The gate cannot run (bad trajectory file / empty bench section) —
+    reported as 'bench gate: ERROR — ...' + exit 2, never a traceback."""
+
+
+def _load_prior(path: str) -> list[dict]:
+    """Stored trajectory runs; [] when the file does not exist yet (first
+    run on a fresh checkout is a baseline-recording run, not an error).
+    A file that EXISTS but cannot be parsed is an error — silently
+    dropping history would let a regression gate itself green."""
+    from benchmarks.trajectory import load_runs
+    if not os.path.exists(path):
+        print(f"bench gate: no trajectory file at {path} — this run "
+              f"becomes the first baseline")
+        return []
+    try:
+        runs = load_runs(path)
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        raise GateError(
+            f"trajectory file {path} exists but cannot be read "
+            f"({e.__class__.__name__}: {e}); fix or delete it, or point "
+            f"BENCH_PATH elsewhere") from None
+    if not isinstance(runs, list):
+        raise GateError(f"trajectory file {path} parsed to "
+                        f"{type(runs).__name__}, expected a list of runs")
+    return runs
+
+
+def _section(run: dict, name: str, required_variant: str | None = None):
+    """A run section that the gate is about to index into; empty or
+    variant-less sections become a clear GateError instead of an
+    IndexError/StopIteration."""
+    rows = run.get(name)
+    if not rows:
+        raise GateError(
+            f"benchmark produced no '{name}' rows — the {name} bench "
+            f"returned empty; the gate cannot compare this run")
+    if required_variant is not None:
+        row = next((r for r in rows if r.get("variant") == required_variant),
+                   None)
+        if row is None:
+            raise GateError(
+                f"'{name}' section has no '{required_variant}' variant row "
+                f"(got {sorted({r.get('variant') for r in rows})})")
+        return row
+    return rows
+
+
 def main() -> int:
-    from benchmarks import throughput
     from benchmarks.trajectory import (DEFAULT_PATH, append_run, best_mbps,
-                                       load_runs, serve_mbps)
+                                       serve_mbps, serve_under_faults_mbps)
 
     tol = float(os.environ.get("BENCH_GATE_TOL", "0.2"))
     path = os.environ.get("BENCH_PATH", DEFAULT_PATH)
 
+    prior = _load_prior(path)                  # fail fast, BEFORE the
+                                               # heavy imports and the
+                                               # minutes-long benches run
+    from benchmarks import throughput
+
     rows = throughput.kernel_sweep(full=False)
     stream_rows = throughput.streaming_bench(full=False)
     serve_rows = throughput.serve_bench(full=False)
+    faults_rows = throughput.serve_faults_bench(full=False)
     plans = throughput.plan_rows()
     run = {"full": False, "rows": rows, "streaming": stream_rows,
-           "serve": serve_rows, "plans": plans, "gate": True}
+           "serve": serve_rows, "serve_faults": faults_rows,
+           "plans": plans, "gate": True}
+    if not rows:
+        raise GateError("kernel_sweep returned no rows — nothing to gate")
     cur = best_mbps(run)
     n_bits = rows[0]["n_bits"]
 
-    prior = load_runs(path)
     # only compare runs of the same workload size (full flag + n_bits)
     comparable = [r for r in prior
                   if not r.get("full")
@@ -48,7 +110,7 @@ def main() -> int:
                           for row in r.get("rows", []))]
     append_run(run, path)
 
-    single = next(r for r in stream_rows if r["variant"] == "single_shot")
+    single = _section(run, "streaming", "single_shot")
     beststream = max((r["mbps"] for r in stream_rows
                       if r["variant"] != "single_shot"), default=0.0)
     print(f"bench gate: best kernel config {cur:.2f} Mb/s; streaming best "
@@ -58,7 +120,7 @@ def main() -> int:
     # baseline of THIS run, and vs stored server runs of the same workload
     srv = serve_mbps(run)
     indep = serve_mbps(run, "independent")
-    srow = next(r for r in serve_rows if r["variant"] == "server")
+    srow = _section(run, "serve", "server")
     print(f"bench gate: serve {srow['sessions']} sessions/"
           f"{srow['buckets']} buckets — server {srv:.2f} Mb/s vs "
           f"independent {indep:.2f} Mb/s (occupancy "
@@ -85,6 +147,31 @@ def main() -> int:
         print("bench gate: no comparable stored serve baseline — "
               "recorded only")
 
+    # serve-under-faults section: the same comparison for the workload
+    # with the seeded 1%-launch-failure injection — catches a fault-
+    # tolerance layer whose recovery path got expensive
+    frow = _section(run, "serve_faults", "server_faults")
+    fsrv = serve_under_faults_mbps(run)
+    print(f"bench gate: serve under faults {fsrv:.2f} Mb/s "
+          f"({frow['injected']} injected launch failures, "
+          f"{frow['retries']} retries, {frow['degraded']} degraded, "
+          f"health={frow['health']})")
+    faults_comp = [serve_under_faults_mbps(r) for r in comparable
+                   if any(row.get("variant") == "server_faults"
+                          and row.get("sessions") == frow["sessions"]
+                          and row.get("n_bits") == frow["n_bits"]
+                          for row in r.get("serve_faults", []))]
+    if faults_comp:
+        fbase = max(faults_comp)
+        print(f"bench gate: stored serve-under-faults baseline "
+              f"{fbase:.2f} Mb/s (floor {(1 - tol) * fbase:.2f})")
+        if fsrv < (1.0 - tol) * fbase:
+            fail.append(f"serve-under-faults aggregate regressed "
+                        f"{(1 - fsrv / fbase):.0%} (> {tol:.0%})")
+    else:
+        print("bench gate: no comparable stored serve-under-faults "
+              "baseline — recorded only")
+
     if not comparable:
         print("bench gate: no comparable stored baseline — recorded only")
         return 1 if fail else 0
@@ -104,4 +191,8 @@ def main() -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    try:
+        sys.exit(main())
+    except GateError as e:
+        print(f"bench gate: ERROR — {e}")
+        sys.exit(2)

@@ -125,4 +125,82 @@ print(f"serve smoke: 8 sessions / {len(srv.buckets())} buckets bit-exact, "
 print("SERVE_SMOKE_OK")
 EOF
 
+# ---- chaos smoke: the same multi-tenant service under a seeded fault
+# schedule — injected kernel-launch failures, slow launches past the
+# per-launch deadline, forced plan-cache evictions, and one tenant
+# pushing NaN-poisoned LLRs. Healthy sessions must come out bit-identical
+# to their solo stream_decode; the poisoned tenant must be quarantined
+# with structured errors (teardown still works); the server loop must
+# never die; every fault must show up in metrics_snapshot().
+python - <<'EOF'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import DecoderConfig, FrameSpec, encode
+from repro.core.stream import stream_decode
+from repro.channel.sim import awgn, bpsk
+from repro.serve import DecodeServer, PlanCache, SessionQuarantined
+from repro.testing import FaultInjector, FaultSpec
+
+spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+cfg = DecoderConfig(spec=spec)
+rng = np.random.default_rng(0)
+
+def rx_for(n, seed):
+    bits = jnp.asarray(rng.integers(0, 2, n))
+    tx = bpsk(encode(bits, cfg.trellis).reshape(-1))
+    return np.asarray(awgn(jax.random.PRNGKey(seed), tx, 4.0)).reshape(n, 2)
+
+nround, n = 4, 4 * 5 * spec.f
+rx = [rx_for(n, i) for i in range(4)]
+faults = FaultInjector(
+    FaultSpec("launch_error", every=3),
+    FaultSpec("launch_slow", every=4, delay_s=0.08),
+    FaultSpec("corrupt_llr", every=2, mode="nan", sessions=(3,)),
+    FaultSpec("plan_cache_miss", every=5),
+    seed=5)
+srv = DecodeServer(slots=4, cache=PlanCache(), faults=faults,
+                   launch_timeout_s=0.04, max_retries=2, backoff_s=0.0,
+                   quarantine_after=2)
+sids = [srv.open_session(cfg, chunk_frames=5) for _ in range(4)]
+refused = 0
+per = n // nround
+for r in range(nround):
+    for sid in sids:
+        try:
+            srv.push(sid, rx[sid][r * per:(r + 1) * per])
+        except SessionQuarantined as e:
+            assert (e.sid, e.retry_after_steps) == (3, None), e
+            refused += 1
+    while srv.step():                       # the loop must survive faults
+        pass
+assert refused >= 1, "poisoned tenant was never quarantined"
+try:
+    srv.poll(3)
+    raise AssertionError("poll of a quarantined session did not raise")
+except SessionQuarantined as e:
+    assert e.strikes >= 2 and "quarantined" in str(e), e
+
+snap = srv.metrics_snapshot()
+tot = snap["totals"]
+assert snap["quarantined_sessions"] == 1, snap
+assert tot["launch_errors"] > 0 and tot["timeouts"] > 0, tot
+assert tot["poisoned_pushes"] >= 2 and tot["sanitized_values"] > 0, tot
+assert tot["quarantined"] == 1 and tot["cache_refreshes"] >= 1, tot
+assert tot["health"] in ("impaired", "degraded"), tot
+assert snap["faults"]["injected"]["launch_error"] >= 1, snap["faults"]
+
+for sid in (0, 1, 2):                       # healthy tenants: bit-exact
+    got = np.concatenate([srv.poll(sid), srv.close_session(sid)])[:n]
+    want = stream_decode(cfg, rx[sid], n, chunk_frames=5)
+    assert np.array_equal(got, want), f"healthy session {sid}: WRONG BITS"
+qbits = srv.close_session(3)                # teardown always works
+assert srv.num_sessions == 0
+print(f"chaos smoke: {tot['launch_errors']} launch errors, "
+      f"{tot['timeouts']} timeouts, {tot['retries']} retries, "
+      f"{tot['degraded']} degraded, {tot['sanitized_values']} LLRs "
+      f"sanitized, 1 tenant quarantined ({qbits.size} bits salvaged) — "
+      f"3 healthy tenants bit-exact, health={tot['health']}")
+print("CHAOS_SMOKE_OK")
+EOF
+
 python scripts/bench_gate.py

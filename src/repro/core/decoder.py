@@ -20,7 +20,8 @@ NEG = jnp.float32(-1e30)   # "minus infinity" for unreachable-ish inits
 
 
 def viterbi_forward(llr: jax.Array, trellis: Trellis,
-                    sigma0: jax.Array | None = None, radix: int = 2):
+                    sigma0: jax.Array | None = None, radix: int = 2,
+                    renorm_every: int = 1):
     """Alg. 1: ACS over all stages.
 
     Args:
@@ -31,6 +32,14 @@ def viterbi_forward(llr: jax.Array, trellis: Trellis,
         scan step (half the trip count — mirrors the kernels' radix-4 ACS).
         Each fused half-step performs the identical arithmetic sequence
         (candidates, select, max-normalize), so outputs are bit-identical.
+      renorm_every: path-metric renormalization period — subtract the
+        stage max every N stages. 1 (default) is the historical per-stage
+        normalization (DESIGN §8, also what the Pallas kernels do); 0
+        disables it entirely (metrics grow ~|llr|·n — safe only for
+        bounded n and sane inputs, the baseline the renormalized path is
+        gated bit-identical against on clean streams); N>1 amortizes the
+        max reduction over N stages. Only the radix-2 path supports
+        N != 1 (the reference backend's path).
 
     Returns:
       sel:   (n, S) int8 selector bits (0 -> predecessor 2j, 1 -> 2j+1);
@@ -46,6 +55,33 @@ def viterbi_forward(llr: jax.Array, trellis: Trellis,
     if sigma0 is None:
         sigma0 = jnp.zeros((S,), jnp.float32)
     assert radix in (2, 4), radix
+    assert renorm_every >= 0, renorm_every
+
+    if renorm_every != 1:
+        # periodic (or disabled) renormalization: the per-stage norm mask
+        # rides along the scan. Kept separate from the default path below
+        # so renorm_every=1 keeps its exact historical graph.
+        assert radix == 2, "renorm_every != 1 requires radix=2 (reference)"
+        n = bm_half.shape[0]
+        if renorm_every > 0:
+            norm_mask = (jnp.arange(n) % renorm_every) == (renorm_every - 1)
+        else:
+            norm_mask = jnp.zeros((n,), bool)
+
+        def step_renorm(sigma, xs):
+            bmh, do_norm = xs
+            bm = expand_half(bmh, trellis)
+            cand0 = sigma[prev_state[:, 0]] + bm[prev_out[:, 0]]
+            cand1 = sigma[prev_state[:, 1]] + bm[prev_out[:, 1]]
+            sel = (cand1 >= cand0)
+            new = jnp.where(sel, cand1, cand0)
+            new = jnp.where(do_norm, new - jnp.max(new), new)
+            return new, (sel.astype(jnp.int8),
+                         jnp.argmax(new).astype(jnp.int32))
+
+        sigma, (sel, amax) = jax.lax.scan(step_renorm, sigma0,
+                                          (bm_half, norm_mask))
+        return sel, sigma, amax
 
     def step(sigma, bmh):
         bm = expand_half(bmh, trellis)                # (2^beta,)

@@ -71,9 +71,13 @@ def frame_llr(llr: jax.Array, spec: FrameSpec) -> jax.Array:
 
 
 def decode_frame(llr_frame: jax.Array, trellis: Trellis,
-                 spec: FrameSpec) -> jax.Array:
-    """Decode one (L, beta) frame -> (f,) bits. Pure-JAX reference path."""
-    sel, sigma, amax = viterbi_forward(llr_frame, trellis)  # uniform sigma0
+                 spec: FrameSpec, renorm_every: int = 1) -> jax.Array:
+    """Decode one (L, beta) frame -> (f,) bits. Pure-JAX reference path.
+
+    ``renorm_every`` is the path-metric renormalization period (see
+    viterbi_forward; 1 = the historical per-stage normalization)."""
+    sel, sigma, amax = viterbi_forward(                     # uniform sigma0
+        llr_frame, trellis, renorm_every=renorm_every)
     if spec.parallel_tb:
         return parallel_traceback(sel, amax, trellis, spec.v1, spec.f,
                                   spec.f0, spec.v2s, spec.start)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from .framed import FrameSpec, framed_decode, frame_llr, decode_frame
 from .puncture import depuncture, check_alignment
+from .sanitize import LLR_CLIP as _LLR_CLIP
 from .trellis import Trellis, STD_K7
 
 __all__ = ["DecoderConfig", "make_decoder", "make_frame_decoder"]
@@ -40,6 +41,12 @@ class DecoderConfig:
     compressed with float32 path-metric accumulation: the one knob that is
     NOT bit-exact, but BER-neutral to within 1e-3 at Eb/N0 >= 2 dB
     (tests/test_ber.py gates it).
+
+    ``renorm_every`` is the path-metric renormalization period: 1
+    (default) subtracts the stage max every ACS stage — the historical
+    behavior and what the Pallas kernels always do; N>1 amortizes the max
+    reduction over N stages, 0 disables it (reference backend only, for
+    the renormalization bit-identity gate in tests/test_faults.py).
     """
     trellis: Trellis = STD_K7
     spec: FrameSpec = FrameSpec()
@@ -51,6 +58,7 @@ class DecoderConfig:
     frames_per_tile: int | str = "auto"   # tile size, or VMEM-planned
     layout: str = "lane"           # 'lane' | 'sublane' survivor layout
     bm_dtype: str = "float32"      # 'float32' | 'bfloat16' branch metrics
+    renorm_every: int = 1          # path-metric renormalization period
 
     def __post_init__(self):
         if self.rate != "1/2":
@@ -63,6 +71,13 @@ class DecoderConfig:
         if self.bm_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"bm_dtype must be 'float32' or 'bfloat16', "
                              f"got {self.bm_dtype!r}")
+        if self.renorm_every < 0:
+            raise ValueError(f"renorm_every must be >= 0, "
+                             f"got {self.renorm_every}")
+        if self.renorm_every != 1 and self.backend != "reference":
+            raise ValueError(
+                "renorm_every != 1 requires backend='reference' (the "
+                "Pallas kernels renormalize every stage unconditionally)")
 
 
 def _build_frame_decoder(cfg: DecoderConfig):
@@ -71,7 +86,8 @@ def _build_frame_decoder(cfg: DecoderConfig):
     if cfg.backend == "reference":
         def decode_frames(frames):
             return jax.vmap(
-                lambda fr: decode_frame(fr, cfg.trellis, cfg.spec))(frames)
+                lambda fr: decode_frame(fr, cfg.trellis, cfg.spec,
+                                        cfg.renorm_every))(frames)
     elif cfg.backend in ("kernel", "kernel_split"):
         from ..kernels import ops as kops
         unified = cfg.backend == "kernel"
@@ -109,6 +125,12 @@ def make_decoder(cfg: DecoderConfig):
     @partial(jax.jit, static_argnums=(1,))
     def decode(stream: jax.Array, n: int) -> jax.Array:
         """stream: punctured soft symbols (m,) for rate!=1/2, or (n,beta)."""
+        # in-graph input hardening (core.sanitize): NaN/Inf -> neutral
+        # zero, |llr| > clip -> ±clip. Identity on clean in-range inputs,
+        # so the clean path stays bit-identical.
+        stream = jnp.clip(
+            jnp.where(jnp.isfinite(stream), stream, jnp.zeros_like(stream)),
+            -_LLR_CLIP, _LLR_CLIP)
         if cfg.rate != "1/2":
             llr = depuncture(stream, cfg.rate, n)
         else:

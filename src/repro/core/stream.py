@@ -54,6 +54,7 @@ import jax.numpy as jnp
 
 from .pipeline import DecoderConfig
 from .puncture import PATTERNS
+from .sanitize import LLR_CLIP, sanitize_llr
 
 __all__ = ["StreamContext", "StreamDecoder", "Window", "make_stream_decoder",
            "stream_decode"]
@@ -88,14 +89,29 @@ class StreamContext:
     pattern phase. ``append`` absorbs raw input; ``take_windows`` yields
     every complete chunk window; ``flush_window`` zero-pads and yields the
     final partial chunk (or None if nothing is pending).
+
+    The context is also the stream's numeric-robustness carry: every
+    ``append`` validates the push shape and (``sanitize='zero'``, the
+    default) scrubs NaN/Inf to neutral zero LLRs and clamps |llr| >
+    ``llr_clip`` — bit-identical on clean inputs, with the cumulative
+    scrub count in ``n_sanitized``/``numeric_stats()``. Per-stage
+    path-metric renormalization inside each window's forward pass
+    (DecoderConfig.renorm_every) plus this input clamp is what keeps an
+    UNBOUNDED stream's metrics bounded in fp32/bf16 no matter how long
+    the session lives. ``sanitize='raise'`` rejects poisoned pushes
+    instead (the serve layer's strict-tenant policy); ``'off'`` skips the
+    scan (the serve layer pre-sanitizes at its own boundary).
     """
 
-    def __init__(self, spec, beta: int, chunk_frames: int, rate: str = "1/2"):
+    def __init__(self, spec, beta: int, chunk_frames: int, rate: str = "1/2",
+                 *, sanitize: str = "zero", llr_clip: float = LLR_CLIP):
         assert chunk_frames > 0
         self.spec = spec
         self.beta = beta
         self.chunk_frames = chunk_frames
         self.rate = rate
+        self.sanitize = sanitize
+        self.llr_clip = llr_clip
         self.reset()
 
     def reset(self):
@@ -106,6 +122,27 @@ class StreamContext:
         self._phase = 0                         # stages depunctured so far
         self.n_in = 0                           # stages appended
         self.n_out = 0                          # bits covered by windows
+        self.n_sanitized = 0                    # poisoned values scrubbed
+
+    def check_shape(self, llr: np.ndarray) -> None:
+        """Reject structurally invalid pushes with a clear error (the raw
+        reshape inside ``append`` would raise something cryptic)."""
+        if llr.ndim > 2:
+            raise ValueError(
+                f"push must be flat or (m, beta); got shape {llr.shape}")
+        if self.rate == "1/2" and llr.size % self.beta != 0:
+            raise ValueError(
+                f"rate-1/2 push of {llr.size} values is not a multiple of "
+                f"beta={self.beta} soft symbols per stage")
+        if llr.ndim == 2 and llr.shape[1] != self.beta:
+            raise ValueError(
+                f"2-D push must have beta={self.beta} columns; "
+                f"got shape {llr.shape}")
+
+    def numeric_stats(self) -> dict:
+        """Cumulative numeric-hardening counters for this stream."""
+        return {"stages_in": self.n_in, "bits_out": self.n_out,
+                "sanitized_values": self.n_sanitized}
 
     # -- depuncturing (stream-global phase) -------------------------------
     def _stage_counts(self, t_max: int) -> np.ndarray:
@@ -151,6 +188,10 @@ class StreamContext:
         punctured: the raw punctured symbol stream, flat, any slice size —
         the pattern alignment is tracked here, stream-globally."""
         llr = np.asarray(llr, np.float32)
+        self.check_shape(llr)
+        if self.sanitize != "off":
+            llr, n_bad = sanitize_llr(llr, self.llr_clip, self.sanitize)
+            self.n_sanitized += n_bad
         if self.rate != "1/2":
             self._raw = np.concatenate([self._raw, llr.reshape(-1)])
             staged = self._depuncture(final=False)
@@ -264,7 +305,8 @@ class StreamDecoder:
     """
 
     def __init__(self, cfg: DecoderConfig, chunk_frames: int, *,
-                 depth: int = 1, mesh=None, decode_frames=None, cache=None):
+                 depth: int = 1, mesh=None, decode_frames=None, cache=None,
+                 faults=None, sanitize: str = "zero"):
         assert chunk_frames > 0 and depth >= 0
         self.cfg = cfg
         self.spec = cfg.spec
@@ -277,7 +319,13 @@ class StreamDecoder:
         if cache is None:
             from ..serve.plan_cache import PLAN_CACHE as cache
         self._cache = cache
-        self._ctx = StreamContext(cfg.spec, self.beta, chunk_frames, cfg.rate)
+        # fault-injection hook (repro.testing.faults) — None in production.
+        # The single-stream front-end has no retry machinery: an injected
+        # launch fault propagates to the caller (the multi-tenant server
+        # is the layer that retries/degrades).
+        self._faults = faults
+        self._ctx = StreamContext(cfg.spec, self.beta, chunk_frames,
+                                  cfg.rate, sanitize=sanitize)
         self._inflight = collections.deque()    # (device_array, n_bits)
 
     def _window_decoder(self, nframes: int):
@@ -299,6 +347,8 @@ class StreamDecoder:
         return self._cache.window_decoder(self.cfg, nframes, mesh=self.mesh)
 
     def _dispatch(self, w: Window):
+        if self._faults is not None:
+            self._faults.launch("stream")
         bits = self._window_decoder(w.nframes)(jnp.asarray(w.window))
         self._inflight.append((bits, w.n_bits))
 
@@ -311,7 +361,10 @@ class StreamDecoder:
 
     def push(self, llr) -> np.ndarray:
         """Feed soft symbols; returns the decoded bits of every chunk that
-        has completed so far."""
+        has completed so far. The context validates the push shape and
+        sanitizes NaN/Inf/out-of-range values (see StreamContext)."""
+        if self._faults is not None:
+            llr = self._faults.corrupt(llr)
         self._ctx.append(llr)
         out = []
         for w in self._ctx.take_windows():
@@ -331,10 +384,14 @@ class StreamDecoder:
         return (np.concatenate(out) if out
                 else np.zeros((0,), np.int32))
 
+    def numeric_stats(self) -> dict:
+        """The context's cumulative numeric-hardening counters."""
+        return self._ctx.numeric_stats()
+
 
 def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
                         mesh=None, depth: int = 1,
-                        cache=None) -> StreamDecoder:
+                        cache=None, faults=None) -> StreamDecoder:
     """Build a StreamDecoder for ``cfg``.
 
     chunk_frames: frames per chunk; default comes from
@@ -346,6 +403,7 @@ def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
     depth: chunks allowed in flight behind the dispatch front (1 = classic
       double buffering; 0 = synchronous, for debugging).
     cache: plan cache override (default: the process-global PLAN_CACHE).
+    faults: optional repro.testing.faults.FaultInjector (test harness).
     """
     num_devices = int(mesh.devices.size) if mesh is not None else 1
     if chunk_frames is None:
@@ -357,7 +415,7 @@ def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
             num_devices=num_devices)
         chunk_frames = plan.chunk_frames
     return StreamDecoder(cfg, chunk_frames, depth=depth, mesh=mesh,
-                         cache=cache)
+                         cache=cache, faults=faults)
 
 
 def stream_decode(cfg: DecoderConfig, llr, n: int | None = None, *,

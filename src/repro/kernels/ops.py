@@ -67,6 +67,24 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
                     quantizes the metrics once (BER-neutral to ~1e-3).
     """
     spec.validate()
+    # entry validation (trace-time, so invalid calls fail with a clear
+    # message instead of a shape error deep inside a kernel)
+    if frames.ndim != 3:
+        raise ValueError(
+            f"frames must be (F, L, beta), got {frames.ndim}-D "
+            f"{frames.shape}")
+    if frames.shape[1] != spec.frame_len:
+        raise ValueError(
+            f"frames.shape[1]={frames.shape[1]} != spec.frame_len="
+            f"{spec.frame_len} (v1 + f + v2 overlap window)")
+    if frames.shape[2] != trellis.beta:
+        raise ValueError(
+            f"frames.shape[2]={frames.shape[2]} != trellis.beta="
+            f"{trellis.beta} coded bits per stage")
+    if not jnp.issubdtype(frames.dtype, jnp.floating):
+        raise ValueError(
+            f"frames must be floating-point LLRs, got dtype "
+            f"{frames.dtype}")
     lay = Layout(layout)
     if frames_per_tile == "auto":
         frames_per_tile = plan_tiles(

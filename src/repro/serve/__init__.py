@@ -9,10 +9,13 @@ for the transformer side of this repo — THIS package is the Viterbi
 service.)
 """
 from .plan_cache import PLAN_CACHE, PlanCache          # noqa: F401
-from .metrics import BucketMetrics, ServeMetrics       # noqa: F401
+from .metrics import BucketMetrics, ServeMetrics, FAULT_COUNTERS  # noqa: F401
 from .scheduler import Bucket, Session, bucket_plan    # noqa: F401
-from .server import Backpressure, DecodeServer, ServerFull  # noqa: F401
+from .server import (Backpressure, DecodeServer, LaunchTimeout,  # noqa: F401
+                     PoisonedInput, ServeError, ServerFull,
+                     SessionQuarantined)
 
-__all__ = ["DecodeServer", "ServerFull", "Backpressure", "PlanCache",
-           "PLAN_CACHE", "ServeMetrics", "BucketMetrics", "Bucket",
-           "Session", "bucket_plan"]
+__all__ = ["DecodeServer", "ServeError", "ServerFull", "Backpressure",
+           "PoisonedInput", "SessionQuarantined", "LaunchTimeout",
+           "PlanCache", "PLAN_CACHE", "ServeMetrics", "BucketMetrics",
+           "FAULT_COUNTERS", "Bucket", "Session", "bucket_plan"]

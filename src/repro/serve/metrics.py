@@ -1,4 +1,5 @@
-"""Per-bucket serving metrics: latency percentiles and batch occupancy.
+"""Per-bucket serving metrics: latency percentiles, batch occupancy, and
+fault-tolerance health counters.
 
 The serve layer's whole reason to exist is batch occupancy — the kernels
 only hit their throughput at high frame counts per launch — so the
@@ -7,6 +8,17 @@ launch carried live session data vs padding, and how long each window
 waited between enqueue (push) and materialized bits. Latencies are plain
 host wall-clock samples; percentiles are computed on demand so recording
 stays O(1) per window.
+
+Since the fault-tolerance layer, each bucket also tracks its failure
+story: launch errors and deadline timeouts, retries, launches that
+DEGRADED to the reference-decoder fallback, plan-cache refreshes forced
+by fault injection, poisoned pushes (and how many values were
+sanitized), and sessions quarantined out of the bucket. ``health`` folds
+those into a one-word per-bucket status the snapshot carries:
+``ok`` (no faults seen), ``impaired`` (faults seen, all recovered by
+retry/sanitize), ``degraded`` (at least one launch fell back to the
+reference decoder — results stay correct, the bucket is not running its
+compiled fast path).
 """
 from __future__ import annotations
 
@@ -15,11 +27,18 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["BucketMetrics", "ServeMetrics", "percentile", "LATENCY_SAMPLES"]
+__all__ = ["BucketMetrics", "ServeMetrics", "percentile", "LATENCY_SAMPLES",
+           "FAULT_COUNTERS"]
 
 #: Latency samples retained per bucket (rolling window — a long-running
 #: server keeps O(1) memory; percentiles describe recent traffic).
 LATENCY_SAMPLES = 4096
+
+#: Counter fields summed into ``ServeMetrics.totals()`` and carried in
+#: every snapshot row (the robustness-observability contract).
+FAULT_COUNTERS = ("launch_errors", "timeouts", "retries", "degraded",
+                  "cache_refreshes", "poisoned_pushes", "sanitized_values",
+                  "quarantined")
 
 
 def percentile(samples, p: float) -> float:
@@ -38,6 +57,16 @@ class BucketMetrics:
     frames: int = 0                   # live frames decoded
     pad_frames: int = 0               # padding frames launched
     bits: int = 0                     # real bits returned to sessions
+    # -- fault-tolerance counters -----------------------------------------
+    launch_errors: int = 0            # kernel launches that raised
+    timeouts: int = 0                 # launches past the deadline
+    retries: int = 0                  # re-dispatch attempts after a fault
+    degraded: int = 0                 # launches served by the ref fallback
+    cache_refreshes: int = 0          # forced plan-cache rebuilds
+    poisoned_pushes: int = 0          # pushes failing input validation
+    sanitized_values: int = 0         # LLR values scrubbed/clamped
+    quarantined: int = 0              # sessions quarantined (cumulative)
+    last_error: str = ""              # most recent fault, human-readable
     latency_ms: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_SAMPLES))
 
@@ -50,11 +79,30 @@ class BucketMetrics:
         self.bits += bits
         self.latency_ms.extend(float(t) for t in window_latency_ms)
 
+    def record_fault(self, counter: str, error: str = "", n: int = 1) -> None:
+        """Bump one fault counter (a FAULT_COUNTERS name); remember the
+        most recent error string for the snapshot."""
+        assert counter in FAULT_COUNTERS, counter
+        setattr(self, counter, getattr(self, counter) + n)
+        if error:
+            self.last_error = error
+
     @property
     def occupancy(self) -> float:
         """Live fraction of launched frames (1.0 = perfectly packed)."""
         total = self.frames + self.pad_frames
         return self.frames / total if total else 0.0
+
+    @property
+    def health(self) -> str:
+        """'ok' | 'impaired' (faults seen, all recovered on the fast
+        path) | 'degraded' (reference fallback was needed)."""
+        if self.degraded:
+            return "degraded"
+        if (self.launch_errors or self.timeouts or self.retries
+                or self.poisoned_pushes or self.quarantined):
+            return "impaired"
+        return "ok"
 
     def p50_ms(self) -> float:
         return percentile(self.latency_ms, 50)
@@ -64,12 +112,17 @@ class BucketMetrics:
 
     def snapshot(self) -> dict:
         """JSON-ready row (benchmarks/trajectory 'serve' section shape)."""
-        return {"bucket": self.bucket, "launches": self.launches,
-                "windows": self.windows, "frames": self.frames,
-                "pad_frames": self.pad_frames, "bits": self.bits,
-                "occupancy": round(self.occupancy, 4),
-                "p50_ms": round(self.p50_ms(), 3),
-                "p99_ms": round(self.p99_ms(), 3)}
+        row = {"bucket": self.bucket, "launches": self.launches,
+               "windows": self.windows, "frames": self.frames,
+               "pad_frames": self.pad_frames, "bits": self.bits,
+               "occupancy": round(self.occupancy, 4),
+               "p50_ms": round(self.p50_ms(), 3),
+               "p99_ms": round(self.p99_ms(), 3),
+               "health": self.health}
+        row.update({c: getattr(self, c) for c in FAULT_COUNTERS})
+        if self.last_error:
+            row["last_error"] = self.last_error
+        return row
 
 
 class ServeMetrics:
@@ -94,9 +147,15 @@ class ServeMetrics:
         lat = [t for m in self for t in m.latency_ms]
         frames = sum(m.frames for m in self)
         pad = sum(m.pad_frames for m in self)
-        return {"launches": sum(m.launches for m in self),
-                "windows": sum(m.windows for m in self),
-                "frames": frames, "pad_frames": pad,
-                "bits": sum(m.bits for m in self),
-                "occupancy": frames / (frames + pad) if frames + pad else 0.0,
-                "p50_ms": percentile(lat, 50), "p99_ms": percentile(lat, 99)}
+        out = {"launches": sum(m.launches for m in self),
+               "windows": sum(m.windows for m in self),
+               "frames": frames, "pad_frames": pad,
+               "bits": sum(m.bits for m in self),
+               "occupancy": frames / (frames + pad) if frames + pad else 0.0,
+               "p50_ms": percentile(lat, 50), "p99_ms": percentile(lat, 99)}
+        out.update({c: sum(getattr(m, c) for m in self)
+                    for c in FAULT_COUNTERS})
+        healths = [m.health for m in self]
+        out["health"] = ("degraded" if "degraded" in healths else
+                         "impaired" if "impaired" in healths else "ok")
+        return out

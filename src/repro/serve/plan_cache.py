@@ -78,8 +78,13 @@ class PlanCache:
         self.traces = 0
 
     # -- bookkeeping ------------------------------------------------------
-    def _get(self, key, build):
+    def _get(self, key, build, refresh: bool = False):
+        """Cached build. ``refresh=True`` drops any existing entry first —
+        the fault-injection harness uses it to force the cold path (an
+        evicted / never-compiled plan) on a live server."""
         with self._lock:
+            if refresh:
+                self._fns.pop(key, None)
             fn = self._fns.get(key)
             if fn is not None:
                 self.hits += 1
@@ -129,11 +134,13 @@ class PlanCache:
             cfg.spec, self.frame_decoder(cfg, mesh), int(nframes),
             self._mark_trace))
 
-    def batch_decoder(self, cfg: DecoderConfig, nframes: int, *, mesh=None):
+    def batch_decoder(self, cfg: DecoderConfig, nframes: int, *, mesh=None,
+                      refresh: bool = False):
         """Jitted (nframes, L, beta) frames -> (nframes, f) bits — the
         serve layer's one-launch-per-bucket entry point. ``nframes`` is
         the bucket's fixed batch (slots x chunk_frames), so each bucket
-        compiles exactly once."""
+        compiles exactly once. ``refresh`` forces a rebuild (fault
+        injection only — exercises the cold-cache path)."""
         key = ("batch", cfg, int(nframes), mesh)
 
         def build():
@@ -147,7 +154,7 @@ class PlanCache:
 
             return run
 
-        return self._get(key, build)
+        return self._get(key, build, refresh=refresh)
 
 
 #: Process-global cache: tenant churn anywhere in the process never

@@ -55,7 +55,14 @@ class PendingWindow:
 
 @dataclasses.dataclass
 class Session:
-    """One tenant stream and its decoded-output queue."""
+    """One tenant stream and its decoded-output queue.
+
+    ``strikes`` counts pushes that failed input validation (poisoned or
+    malformed LLRs); once it reaches the server's ``quarantine_after``
+    threshold the session is quarantined: ``quarantined`` holds the
+    machine-readable reason, further pushes/polls raise
+    ``SessionQuarantined``, and only ``close_session`` (teardown) still
+    succeeds — one bad tenant never takes down its bucket."""
     sid: int
     cfg: DecoderConfig
     ctx: StreamContext
@@ -63,6 +70,8 @@ class Session:
     inflight: int = 0             # windows queued, not yet decoded
     ready: list = dataclasses.field(default_factory=list)
     closed: bool = False
+    strikes: int = 0              # validation failures so far
+    quarantined: str | None = None  # reason, once quarantined
 
     def _enqueue(self, w: Window) -> None:
         assert w.nframes == self.bucket.chunk_frames    # one bucket geometry

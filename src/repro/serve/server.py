@@ -27,34 +27,118 @@ Flow control is explicit and synchronous:
     collects a session's decoded bits; ``close_session`` flushes the
     tail, drains, and frees the slot.
 
+All flow-control and per-session failures derive from ``ServeError``,
+which carries a machine-readable ``retry_after_steps`` hint (how many
+``step()`` calls should clear the condition; None when retrying won't
+help). The server loop itself NEVER dies on a bad tenant or a bad
+launch; errors surface on that session's ``push``/``poll``.
+
+Fault tolerance (one poisoned buffer or failed launch must not corrupt
+a bucket):
+
+  * input hardening — every ``push`` is validated and (by default)
+    sanitized: NaN/Inf become neutral zero LLRs, |llr| > ``llr_clip``
+    clamps (core.sanitize; bit-identical on clean inputs). A push that
+    fails validation is a STRIKE; after ``quarantine_after`` strikes the
+    session is quarantined — further ``push``/``poll`` raise
+    ``SessionQuarantined`` (structured: sid/reason/strikes) while
+    ``close_session`` still tears it down cleanly.
+  * launch deadline + retry — a batched launch that raises, or exceeds
+    ``launch_timeout_s`` wall-clock, is retried up to ``max_retries``
+    times with exponential backoff (``backoff_s * 2**attempt``).
+  * graceful degrade — when retries are exhausted the batch is decoded
+    by the reference backend (``backend='reference'``, bit-identical to
+    the kernels at fp32) instead of the bucket's compiled fast path, so
+    healthy sessions still get correct bits; the bucket's ``degraded``
+    counter and ``health`` reflect it. A launch whose results fail to
+    materialize in ``_retire`` is re-decoded the same way.
+  * observability — per-bucket error/retry/timeout/degraded/quarantine
+    counters and a health field in ``metrics_snapshot()``.
+
+``faults=`` accepts a ``repro.testing.faults.FaultInjector`` whose
+seeded schedule exercises all of the above deterministically (kernel
+exceptions, slow launches, poisoned LLRs, plan-cache evictions); it is
+None in production and every hook is pay-nothing when unset. The
+injected-slow-launch deadline is cooperative: JAX cannot preempt a
+dispatched computation, so the deadline is checked around the dispatch
+(and observed again at materialize time) rather than interrupting it.
+
 With ``mesh=...`` every bucket's batch is sharded across the mesh's
 devices (distributed/stream.py) — the batch is the frame axis, so the
 scale-out story of the single stream carries over unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 import jax.numpy as jnp
 
 from ..core.pipeline import DecoderConfig
+from ..core.sanitize import LLR_CLIP, sanitize_llr
 from ..core.stream import StreamContext
 from .metrics import ServeMetrics
 from .plan_cache import PLAN_CACHE, PlanCache
 from .scheduler import Bucket, Session, bucket_plan
 
-__all__ = ["DecodeServer", "ServerFull", "Backpressure"]
+__all__ = ["DecodeServer", "ServeError", "ServerFull", "Backpressure",
+           "PoisonedInput", "SessionQuarantined", "LaunchTimeout"]
 
 
-class ServerFull(RuntimeError):
+class ServeError(RuntimeError):
+    """Base class of every serve-layer error.
+
+    ``retry_after_steps`` is a machine-readable hint: how many ``step()``
+    calls the caller should drive before retrying the failed operation
+    (None = retrying will not help; fix the condition instead)."""
+
+    def __init__(self, msg: str, *, retry_after_steps: int | None = None):
+        super().__init__(msg)
+        self.retry_after_steps = retry_after_steps
+
+
+class ServerFull(ServeError):
     """Admission refused: the server is at max_sessions live sessions."""
 
 
-class Backpressure(RuntimeError):
+class Backpressure(ServeError):
     """Push refused: the session already has queue_depth windows pending.
 
-    The caller should drive ``step()`` (or ``drain()``) and retry."""
+    The caller should drive ``step()`` (``retry_after_steps`` estimates
+    how many) and retry."""
+
+
+class PoisonedInput(ServeError):
+    """Push rejected by input validation (malformed shape, or poisoned
+    values under the 'raise' sanitize policy). Counts one strike toward
+    quarantine; the push absorbed nothing, so a corrected retry is safe."""
+
+    def __init__(self, msg: str, *, sid: int, n_bad: int = 0):
+        super().__init__(msg, retry_after_steps=None)
+        self.sid = sid
+        self.n_bad = n_bad
+
+
+class SessionQuarantined(ServeError):
+    """The session exceeded the validation-failure threshold and is
+    quarantined: pushes and polls are refused (structured sid/reason/
+    strikes); ``close_session`` still works and returns any bits decoded
+    before quarantine."""
+
+    def __init__(self, sid: int, reason: str, strikes: int):
+        super().__init__(
+            f"session {sid} is quarantined after {strikes} input-validation "
+            f"failures (last: {reason}); close_session() to tear it down",
+            retry_after_steps=None)
+        self.sid = sid
+        self.reason = reason
+        self.strikes = strikes
+
+
+class LaunchTimeout(ServeError):
+    """A batched launch exceeded the per-launch deadline (internal retry
+    signal; surfaces only in bucket metrics/last_error)."""
 
 
 class DecodeServer:
@@ -73,19 +157,45 @@ class DecodeServer:
     mesh:         optional 1-D 'frames' mesh — bucket batches are then
                   sharded across its devices.
     cache:        PlanCache override (default: process-global PLAN_CACHE).
+    launch_timeout_s: per-launch wall-clock deadline (None = no deadline).
+    max_retries:  re-dispatch attempts after a failed/timed-out launch
+                  before degrading to the reference fallback.
+    backoff_s:    base retry backoff; attempt i sleeps backoff_s * 2**i.
+    sanitize:     push input policy — 'zero' (scrub NaN/Inf, clamp
+                  out-of-range; default), 'raise' (reject poisoned
+                  pushes), 'off' (trust the tenant).
+    llr_clip:     out-of-range magnitude threshold for sanitization.
+    quarantine_after: validation-failure strikes before a session is
+                  quarantined.
+    faults:       optional repro.testing.faults.FaultInjector (tests/CI
+                  chaos only; None in production).
     """
 
     def __init__(self, *, slots: int = 4, max_sessions: int = 64,
                  queue_depth: int = 8, depth: int = 1, mesh=None,
-                 cache: PlanCache | None = None):
+                 cache: PlanCache | None = None,
+                 launch_timeout_s: float | None = None,
+                 max_retries: int = 2, backoff_s: float = 0.01,
+                 sanitize: str = "zero", llr_clip: float = LLR_CLIP,
+                 quarantine_after: int = 3, faults=None):
         assert slots > 0 and max_sessions > 0 and queue_depth > 0
         assert depth >= 0
+        assert max_retries >= 0 and backoff_s >= 0.0
+        assert quarantine_after > 0
+        assert sanitize in ("zero", "raise", "off")
         self.slots = slots
         self.max_sessions = max_sessions
         self.queue_depth = queue_depth
         self.depth = depth                    # launches left in flight
         self.mesh = mesh
         self.cache = cache if cache is not None else PLAN_CACHE
+        self.launch_timeout_s = launch_timeout_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.sanitize = sanitize
+        self.llr_clip = llr_clip
+        self.quarantine_after = quarantine_after
+        self.faults = faults
         self.metrics = ServeMetrics()
         self._sessions: dict[int, Session] = {}
         self._buckets: dict[tuple, Bucket] = {}
@@ -113,8 +223,10 @@ class DecodeServer:
             bucket = self._buckets[key] = Bucket(key, cfg, plan)
         sid = self._next_sid
         self._next_sid += 1
+        # the server sanitizes at ITS push boundary (so strikes/counters
+        # land on the session); the context's own scrub is off
         ctx = StreamContext(cfg.spec, cfg.trellis.beta, bucket.chunk_frames,
-                            cfg.rate)
+                            cfg.rate, sanitize="off")
         session = Session(sid, cfg, ctx, bucket)
         self._sessions[sid] = session
         bucket.sessions.add(sid)
@@ -126,23 +238,74 @@ class DecodeServer:
         except KeyError:
             raise KeyError(f"no live session {sid}") from None
 
+    # -- input hardening --------------------------------------------------
+    def _strike(self, session: Session, reason: str) -> None:
+        """One validation failure; quarantine at the threshold."""
+        bm = self.metrics.bucket(session.bucket.id)
+        session.strikes += 1
+        bm.record_fault("poisoned_pushes", error=reason)
+        if session.quarantined is None \
+                and session.strikes >= self.quarantine_after:
+            session.quarantined = reason
+            bm.record_fault("quarantined")
+
+    def _validate_push(self, session: Session, llr):
+        """Convert + validate + sanitize one push; returns the clean
+        array. Strikes (and possibly quarantines) on failure."""
+        try:
+            arr = np.asarray(llr, np.float32)
+        except (TypeError, ValueError) as e:
+            reason = f"push is not numeric: {e}"
+            self._strike(session, reason)
+            raise PoisonedInput(f"session {session.sid}: {reason}",
+                                sid=session.sid) from None
+        try:
+            session.ctx.check_shape(arr)
+            if self.sanitize != "off":
+                arr, n_bad = sanitize_llr(arr, self.llr_clip, self.sanitize)
+            else:
+                n_bad = 0
+        except ValueError as e:
+            self._strike(session, str(e))
+            raise PoisonedInput(f"session {session.sid}: {e}",
+                                sid=session.sid) from None
+        if n_bad:
+            # sanitized to safety — still a strike (a tenant repeatedly
+            # sending poison gets quarantined even under 'zero' policy)
+            bm = self.metrics.bucket(session.bucket.id)
+            bm.record_fault("sanitized_values", n=n_bad)
+            session.ctx.n_sanitized += n_bad    # session_state() visibility
+            self._strike(session,
+                         f"{n_bad} non-finite/out-of-range LLR values "
+                         f"sanitized")
+        return arr
+
     # -- data path --------------------------------------------------------
     def push(self, sid: int, llr) -> None:
         """Feed soft symbols (raw punctured stream for punctured-rate
-        sessions) into a session. Raises Backpressure — BEFORE absorbing
+        sessions) into a session. Validates and sanitizes first (see
+        class docstring), then raises Backpressure — BEFORE absorbing
         anything, so a retry is safe — when the session's pending windows
         plus the windows this push would complete exceed queue_depth
-        (call step() to drain; a single push bigger than queue_depth
-        chunks must be split by the caller)."""
+        (call step() to drain, then retry; a single push bigger than
+        queue_depth chunks must be split by the caller)."""
         session = self._session(sid)
+        if session.quarantined is not None:
+            raise SessionQuarantined(sid, session.quarantined,
+                                     session.strikes)
+        if self.faults is not None:
+            llr = self.faults.corrupt(llr, sid=sid)
+        llr = self._validate_push(session, llr)
         projected = session.ctx.projected_windows(
             session.ctx.incoming_stages(llr))
         if session.inflight + projected > self.queue_depth:
+            overshoot = session.inflight + projected - self.queue_depth
             raise Backpressure(
                 f"session {sid}: {session.inflight} windows pending + "
                 f"{projected} in this push > queue_depth="
                 f"{self.queue_depth}; call step() and retry (or split "
-                f"pushes larger than queue_depth chunks)")
+                f"pushes larger than queue_depth chunks)",
+                retry_after_steps=max(1, -(-overshoot // self.slots)))
         session.absorb(llr)
 
     def step(self) -> int:
@@ -150,7 +313,8 @@ class DecodeServer:
         through JAX's async runtime; results materialize ``depth``
         launches behind the dispatch front (the same double buffering the
         single-stream front-end uses), landing on each session's ready
-        queue. Returns the number of windows dispatched."""
+        queue. Returns the number of windows dispatched. Never raises on
+        a failed launch — the retry/degrade machinery absorbs it."""
         done = 0
         for bucket in self._buckets.values():
             if bucket.queue:
@@ -167,22 +331,88 @@ class DecodeServer:
         taken = bucket.take(self.slots)
         if not taken:
             return 0
-        B = len(taken) * bucket.chunk_frames
         batch = np.concatenate([w.frames for w in taken])
-        fn = self.cache.batch_decoder(bucket.decode_cfg, B, mesh=self.mesh)
-        bucket.inflight.append((fn(jnp.asarray(batch)), taken))
+        self._dispatch(bucket, batch, taken)
         self._retire(bucket, self.depth)
         return len(taken)
 
+    def _ref_fallback(self, bucket: Bucket, nframes: int):
+        """The degraded-mode decoder: same trellis/spec, reference
+        backend (bit-identical to the kernels at fp32 bm_dtype; bf16
+        buckets degrade to the fp32 reference, which is the BER-gated
+        direction). Never consults the fault injector — the fallback is
+        the path that must work when the fast path doesn't."""
+        ref_cfg = dataclasses.replace(bucket.decode_cfg,
+                                      backend="reference", renorm_every=1)
+        return self.cache.batch_decoder(ref_cfg, nframes, mesh=self.mesh)
+
+    def _dispatch(self, bucket: Bucket, batch: np.ndarray, taken) -> None:
+        """Dispatch ``batch`` with deadline/retry/degrade (class
+        docstring). Always appends exactly one in-flight launch."""
+        B = batch.shape[0]
+        bm = self.metrics.bucket(bucket.id)
+        dev = jnp.asarray(batch)
+        deadline = self.launch_timeout_s
+        for attempt in range(self.max_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                if self.faults is not None:
+                    self.faults.launch(bucket.id)
+                refresh = (self.faults is not None
+                           and self.faults.plan_cache_miss())
+                if refresh:
+                    bm.record_fault("cache_refreshes")
+                fn = self.cache.batch_decoder(bucket.decode_cfg, B,
+                                              mesh=self.mesh, refresh=refresh)
+                out = fn(dev)
+                if deadline is not None \
+                        and time.perf_counter() - t0 > deadline:
+                    raise LaunchTimeout(
+                        f"bucket {bucket.id}: launch exceeded "
+                        f"{deadline * 1e3:.1f} ms deadline")
+                bucket.inflight.append((out, taken, batch))
+                return
+            except LaunchTimeout as e:
+                bm.record_fault("timeouts", error=str(e))
+            except Exception as e:                    # noqa: BLE001
+                bm.record_fault("launch_errors", error=repr(e))
+            if attempt < self.max_retries:
+                bm.record_fault("retries")
+                if self.backoff_s:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        # retries exhausted: degrade to the reference fallback so healthy
+        # sessions still get (correct) bits — never drop the batch
+        bm.record_fault("degraded")
+        bucket.inflight.append((self._ref_fallback(bucket, B)(dev),
+                                taken, batch))
+
     def _retire(self, bucket: Bucket, leave: int) -> int:
         """Materialize in-flight launches down to ``leave`` (blocks on the
-        OLDEST only), distribute bits to sessions, record metrics."""
+        OLDEST only), distribute bits to sessions, record metrics. A
+        launch whose results fail to materialize (an async error surfacing
+        late) is re-decoded synchronously by the reference fallback."""
         C, f = bucket.chunk_frames, bucket.decode_cfg.spec.f
+        bm = self.metrics.bucket(bucket.id)
+        deadline = self.launch_timeout_s
         done = 0
         while len(bucket.inflight) > leave:
-            bits_dev, taken = bucket.inflight.popleft()
-            bits = np.asarray(bits_dev)                 # (k*C, f)
+            bits_dev, taken, batch = bucket.inflight.popleft()
+            t0 = time.perf_counter()
+            try:
+                bits = np.asarray(bits_dev)             # (k*C, f)
+            except Exception as e:                      # noqa: BLE001
+                bm.record_fault("launch_errors", error=repr(e))
+                bm.record_fault("degraded")
+                bits = np.asarray(
+                    self._ref_fallback(bucket, batch.shape[0])(
+                        jnp.asarray(batch)))
             t_done = time.perf_counter()
+            if deadline is not None and t_done - t0 > deadline:
+                # cooperative deadline: a hang shows up here; record it
+                # (the NEXT launch's retry path is where recovery happens)
+                bm.record_fault("timeouts",
+                                error=f"bucket {bucket.id}: materialize "
+                                      f"took {(t_done - t0) * 1e3:.1f} ms")
             n_bits = live = 0
             for i, w in enumerate(taken):
                 out = bits[i * C:(i + 1) * C].reshape(-1)[:w.n_bits]
@@ -190,7 +420,7 @@ class DecodeServer:
                 n_bits += w.n_bits
                 live += min(C, -(-w.n_bits // f))       # real frames only
             B = len(taken) * C
-            self.metrics.bucket(bucket.id).record_launch(
+            bm.record_launch(
                 live_frames=live,                       # zero tail frames
                 pad_frames=B - live + bucket.tile_pad(B),  # count as pad
                 windows=len(taken), bits=n_bits,
@@ -211,12 +441,20 @@ class DecodeServer:
     def poll(self, sid: int) -> np.ndarray:
         """Collect (and clear) a session's bits materialized so far —
         non-blocking; results trail the dispatch front by up to ``depth``
-        launches (drain()/close_session force completion)."""
-        return self._session(sid).take_ready()
+        launches (drain()/close_session force completion). A quarantined
+        session raises its structured ``SessionQuarantined`` error
+        instead — use ``close_session`` to tear it down and recover any
+        bits decoded before quarantine."""
+        session = self._session(sid)
+        if session.quarantined is not None:
+            raise SessionQuarantined(sid, session.quarantined,
+                                     session.strikes)
+        return session.take_ready()
 
     def close_session(self, sid: int) -> np.ndarray:
         """Flush the session's tail, decode everything it still has
-        pending, free its slot, and return the remaining bits."""
+        pending, free its slot, and return the remaining bits. Works on
+        quarantined sessions too (teardown must never be refused)."""
         session = self._session(sid)
         session.finish()
         while session.inflight:
@@ -227,14 +465,31 @@ class DecodeServer:
         del self._sessions[sid]
         return session.take_ready()
 
+    def session_state(self, sid: int) -> dict:
+        """Structured per-session health (JSON-ready): strikes,
+        quarantine reason, pending windows, sanitizer counters."""
+        s = self._session(sid)
+        return {"sid": sid, "bucket": s.bucket.id, "strikes": s.strikes,
+                "quarantined": s.quarantined, "inflight": s.inflight,
+                **s.ctx.numeric_stats()}
+
     # -- introspection ----------------------------------------------------
     def buckets(self) -> list[Bucket]:
         return list(self._buckets.values())
 
     def metrics_snapshot(self) -> dict:
         """Per-bucket rows + totals + plan-cache stats, JSON-ready (the
-        shape the benchmarks' 'serve' section records)."""
-        return {"buckets": self.metrics.snapshot(),
+        shape the benchmarks' 'serve' section records). Totals carry the
+        fault counters and overall health; ``quarantined_sessions``
+        counts live quarantined sessions; ``faults`` reports the
+        injector's schedule counters when one is attached."""
+        snap = {"buckets": self.metrics.snapshot(),
                 "totals": self.metrics.totals(),
                 "plan_cache": self.cache.stats(),
-                "sessions": len(self._sessions)}
+                "sessions": len(self._sessions),
+                "quarantined_sessions": sum(
+                    1 for s in self._sessions.values()
+                    if s.quarantined is not None)}
+        if self.faults is not None:
+            snap["faults"] = self.faults.stats()
+        return snap

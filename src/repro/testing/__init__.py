@@ -1,0 +1,6 @@
+"""Deterministic test harnesses (fault injection for the decode service)."""
+from .faults import (FaultInjector, FaultSpec,           # noqa: F401
+                     InjectedFault, InjectedKernelError)
+
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault",
+           "InjectedKernelError"]

@@ -1,0 +1,161 @@
+"""Deterministic fault injection for the decode service and stream layer.
+
+The serve robustness machinery (retry/backoff, deadline, degraded-mode
+fallback, quarantine — repro.serve.server) is only testable if the faults
+it guards against can be produced ON DEMAND and REPRODUCIBLY. This module
+is that harness: a ``FaultInjector`` holds a schedule of ``FaultSpec``
+entries and is consulted from three hook points —
+
+  * ``launch(bucket_id)``   — before a batched kernel launch is
+    dispatched (``DecodeServer._launch`` / ``StreamDecoder._dispatch``).
+    May raise ``InjectedKernelError`` (a failed launch) or sleep
+    ``delay_s`` seconds (a slow/hung launch, which the server's
+    per-launch deadline then converts into a timeout).
+  * ``corrupt(llr, sid=)``  — at the push boundary
+    (``DecodeServer.push`` / ``StreamDecoder.push``). Returns the input
+    with a ``frac`` fraction of entries overwritten by NaN/Inf/huge
+    values (a poisoned tenant); ``sessions`` restricts the blast radius
+    to specific session ids.
+  * ``plan_cache_miss()``   — before the compiled-plan-cache lookup.
+    True forces the server to drop and rebuild the cached program (a
+    cold-cache / evicted-plan event).
+
+Schedules are deterministic two ways: ``every=N`` fires on every Nth
+event of that kind (exact), and ``p`` fires probabilistically from one
+seeded ``numpy`` Generator (reproducible for a fixed seed and call
+order). Both can be combined. The injector never mutates its inputs and
+keeps per-kind event/injection counters (``stats()``) that the serve
+metrics snapshot surfaces next to the retry/degraded counters.
+
+Production code never imports this module unless a ``faults=`` injector
+is explicitly passed in — the hooks are ``None``-guarded no-ops.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultInjector", "InjectedFault",
+           "InjectedKernelError", "KINDS"]
+
+#: Recognized fault kinds (one hook point each; see module docstring).
+KINDS = ("launch_error", "launch_slow", "corrupt_llr", "plan_cache_miss")
+
+#: corrupt_llr poison values by mode ('huge' is finite but far beyond any
+#: sane LLR magnitude — exercises the out-of-range clamp, not the
+#: non-finite scrub).
+_POISON = {"nan": np.nan, "inf": np.inf, "huge": np.float32(1e30)}
+
+
+class InjectedFault(RuntimeError):
+    """Base class for every exception raised BY the injector."""
+
+
+class InjectedKernelError(InjectedFault):
+    """An injected kernel-launch failure (stands in for a Pallas/XLA
+    compile or runtime error escaping the launch)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    kind:     one of ``KINDS``.
+    p:        per-event probability (seeded; 0 disables).
+    every:    also fire deterministically on every Nth event (0 disables).
+    delay_s:  launch_slow — simulated hang duration in seconds.
+    mode:     corrupt_llr — 'nan' | 'inf' | 'huge'.
+    frac:     corrupt_llr — fraction of entries poisoned (at least one).
+    sessions: corrupt_llr — restrict to these session ids (empty = all).
+    """
+    kind: str
+    p: float = 0.0
+    every: int = 0
+    delay_s: float = 0.0
+    mode: str = "nan"
+    frac: float = 0.25
+    sessions: tuple = ()
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.mode not in _POISON:
+            raise ValueError(f"unknown corrupt_llr mode {self.mode!r}; "
+                             f"expected one of {tuple(_POISON)}")
+        if not (0.0 <= self.p <= 1.0 and 0.0 < self.frac <= 1.0
+                and self.every >= 0 and self.delay_s >= 0.0):
+            raise ValueError(f"out-of-range FaultSpec parameters: {self}")
+
+
+class FaultInjector:
+    """A seeded schedule of faults, consulted at the serve/stream hooks."""
+
+    def __init__(self, *specs: FaultSpec, seed: int = 0):
+        self._specs: dict[str, list[FaultSpec]] = collections.defaultdict(list)
+        for s in specs:
+            self._specs[s.kind].append(s)
+        self._rng = np.random.default_rng(seed)
+        self._events = collections.Counter()    # hook calls per kind
+        self.injected = collections.Counter()   # faults fired per kind
+
+    def _fire(self, kind: str, accept=None) -> FaultSpec | None:
+        """One event of ``kind``: returns the first spec that fires.
+
+        Every spec with p > 0 draws from the seeded generator on every
+        event, so the schedule is a pure function of (seed, call order)
+        regardless of which specs fire.
+        """
+        self._events[kind] += 1
+        n = self._events[kind]
+        hit = None
+        for spec in self._specs.get(kind, ()):
+            fires = spec.every > 0 and n % spec.every == 0
+            if spec.p > 0.0 and self._rng.random() < spec.p:
+                fires = True
+            if fires and hit is None and (accept is None or accept(spec)):
+                hit = spec
+        if hit is not None:
+            self.injected[kind] += 1
+        return hit
+
+    # -- hooks (all no-ops unless a matching spec fires) -------------------
+    def launch(self, bucket_id: str = "") -> None:
+        """Launch-path hook: may sleep (slow launch) and/or raise."""
+        slow = self._fire("launch_slow")
+        if slow is not None:
+            time.sleep(slow.delay_s)
+        if self._fire("launch_error") is not None:
+            raise InjectedKernelError(
+                f"injected kernel-launch failure (bucket {bucket_id or '?'})")
+
+    def corrupt(self, llr, sid: int | None = None):
+        """Push-boundary hook: returns ``llr`` with poisoned entries (a
+        copy), or the input untouched when no spec fires."""
+        spec = self._fire(
+            "corrupt_llr",
+            accept=lambda s: not s.sessions or sid in s.sessions)
+        arr = np.asarray(llr, np.float32)
+        if spec is None or arr.size == 0:
+            return llr
+        out = arr.copy()
+        flat = out.reshape(-1)
+        k = max(1, int(spec.frac * flat.size))
+        idx = self._rng.choice(flat.size, size=k, replace=False)
+        vals = np.full(k, _POISON[spec.mode], np.float32)
+        if spec.mode != "nan":                  # both signs of inf/huge
+            vals[1::2] = -vals[1::2]
+        flat[idx] = vals
+        return out
+
+    def plan_cache_miss(self) -> bool:
+        """Cache-lookup hook: True forces a rebuild of the cached plan."""
+        return self._fire("plan_cache_miss") is not None
+
+    def stats(self) -> dict:
+        """JSON-ready counters: hook events seen / faults injected."""
+        return {"events": dict(self._events),
+                "injected": dict(self.injected)}
