@@ -426,5 +426,44 @@ def main(full: bool = False):
     return rows
 
 
+def _cli(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="paper-table throughput benches (Tables IV/V + "
+                    "unified-vs-split)")
+    ap.add_argument("--full", action="store_true",
+                    help="4M-bit workload instead of the 1M-bit quick run")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="record the bench under the obs tracer and write "
+                         "a Chrome trace-event JSON (each table runs as "
+                         "one span; plan_decode/kernel_trace events show "
+                         "what compiled)")
+    args = ap.parse_args(argv)
+    if not args.trace_out:
+        return main(full=args.full)
+
+    from repro.obs import Tracer, set_tracer, write_chrome_trace
+    tracer = Tracer()
+    set_tracer(tracer)
+    try:
+        n = 4_000_000 if args.full else 1_000_000
+        rows = []
+        for name, fn in (("table4", lambda: table4(n)),
+                         ("table5", lambda: table5(n)),
+                         ("unified_vs_split", unified_vs_split)):
+            with tracer.span(f"bench:{name}") as sp:
+                section = fn()
+                sp.set(rows=len(section))
+            rows += section
+        for r in rows:
+            print(",".join(f"{k}={v}" if not isinstance(v, float)
+                           else f"{k}={v:.2f}" for k, v in r.items()))
+    finally:
+        set_tracer(None)
+    obj = write_chrome_trace(tracer, args.trace_out)
+    print(f"trace: {len(obj['traceEvents'])} events -> {args.trace_out}")
+    return rows
+
+
 if __name__ == "__main__":
-    main()
+    _cli()

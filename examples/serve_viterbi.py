@@ -17,10 +17,14 @@ tenant pushing NaN-poisoned LLRs until it is quarantined. Healthy
 sessions must still verify bit-identical; the demo prints the per-bucket
 health and fault counters the server recovered through.
 
+``--trace-out trace.json`` records the whole run with the obs tracer and
+writes a Chrome trace-event file — open it in https://ui.perfetto.dev to
+see the nested push/launch/retire spans (and, under ``--chaos``, the
+retry/degrade recovery sub-spans) on a timeline.
+
 (For the unrelated LM continuous-batching demo, see examples/serve_lm.py.)
 """
 import argparse
-import time
 
 import numpy as np
 import jax
@@ -31,6 +35,7 @@ from repro.core.puncture import puncture
 from repro.core.stream import stream_decode
 from repro.core.trellis import make_trellis
 from repro.channel.sim import awgn, bpsk
+from repro.obs import Tracer, set_tracer, write_chrome_trace
 from repro.serve import (Backpressure, DecodeServer, PlanCache,
                          SessionQuarantined)
 
@@ -53,7 +58,15 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chaos", action="store_true",
                     help="run under a seeded fault-injection schedule")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace_out:
+        tracer = Tracer()
+        set_tracer(tracer)          # lights up serve + stream + planner
 
     k5 = make_trellis(5, (0o23, 0o35))
     spec12 = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
@@ -93,7 +106,6 @@ def main(argv=None):
           f"chunk={args.chunk_frames} frames, slots={args.slots}"
           + (", CHAOS schedule on" if args.chaos else ""))
 
-    t0 = time.perf_counter()
     for r in range(args.chunks):
         for t in tenants:
             if t["quarantined"] is not None:
@@ -115,7 +127,6 @@ def main(argv=None):
                     t["quarantined"] = e
     for t in tenants:
         t["out"].append(srv.close_session(t["sid"]))  # quarantined too
-    dt = time.perf_counter() - t0
 
     total = 0
     poisoned_sids = set(faults._specs["corrupt_llr"][0].sessions) \
@@ -128,8 +139,13 @@ def main(argv=None):
                              chunk_frames=args.chunk_frames)
         assert np.array_equal(got, want), f"{t['name']} sid={t['sid']}"
         total += t["n"]
-    print(f"decoded {total} bits in {dt*1e3:.0f} ms "
-          f"({total/dt/1e6:.2f} Mb/s aggregate) — every healthy session "
+
+    snap = srv.metrics_snapshot()
+    tot = snap["totals"]
+    # throughput/uptime come from the metrics themselves now — no more
+    # hand-timed loop around the workload
+    print(f"decoded {total} verified bits in {tot['uptime_s']*1e3:.0f} ms "
+          f"({tot['mbps']:.2f} Mb/s aggregate) — every healthy session "
           f"bit-identical to its solo stream_decode")
     for t in tenants:
         if t["quarantined"] is not None:
@@ -137,16 +153,20 @@ def main(argv=None):
             print(f"quarantined: {t['name']} sid={e.sid} after "
                   f"{e.strikes} poisoned pushes ({e.reason})")
 
-    snap = srv.metrics_snapshot()
     print(f"{'bucket':<28}{'launches':>9}{'windows':>9}{'occup':>7}"
-          f"{'p50 ms':>8}{'p99 ms':>8}  {'health':<9}")
+          f"{'p50 ms':>8}{'p99 ms':>8}{'Mb/s':>7}  {'health':<9}")
     for row in snap["buckets"]:
         print(f"{row['bucket']:<28}{row['launches']:>9}{row['windows']:>9}"
               f"{row['occupancy']:>7.2f}{row['p50_ms']:>8.1f}"
-              f"{row['p99_ms']:>8.1f}  {row['health']:<9}")
+              f"{row['p99_ms']:>8.1f}{row['mbps']:>7.2f}  "
+              f"{row['health']:<9}")
+    print(f"{'stage':<16}{'count':>7}{'p50 ms':>8}{'p99 ms':>8}"
+          f"{'max ms':>8}")
+    for stage, s in sorted(snap["stages"].items()):
+        print(f"{stage:<16}{s['count']:>7}{s['p50']:>8.2f}{s['p99']:>8.2f}"
+              f"{s['max']:>8.2f}")
     print("plan cache:", snap["plan_cache"])
     if args.chaos:
-        tot = snap["totals"]
         print(f"faults recovered: {tot['launch_errors']} launch errors, "
               f"{tot['timeouts']} timeouts, {tot['retries']} retries, "
               f"{tot['degraded']} degraded launches, "
@@ -155,6 +175,11 @@ def main(argv=None):
               f"{tot['quarantined']} quarantined — overall "
               f"health={tot['health']}")
         print("injector:", snap["faults"])
+    if tracer is not None:
+        obj = write_chrome_trace(tracer, args.trace_out)
+        set_tracer(None)
+        print(f"trace: {len(obj['traceEvents'])} events -> "
+              f"{args.trace_out} (open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

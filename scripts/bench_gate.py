@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -90,14 +91,27 @@ def main() -> int:
                                                # minutes-long benches run
     from benchmarks import throughput
 
-    rows = throughput.kernel_sweep(full=False)
-    stream_rows = throughput.streaming_bench(full=False)
-    serve_rows = throughput.serve_bench(full=False)
-    faults_rows = throughput.serve_faults_bench(full=False)
-    plans = throughput.plan_rows()
+    section_s: dict[str, float] = {}
+
+    def timed(name, fn):
+        """Run one bench section, keeping its wall time — the recorded
+        trajectory then shows where the gate's minutes actually go (and
+        when a PR makes one section balloon)."""
+        t0 = time.perf_counter()
+        out = fn()
+        section_s[name] = round(time.perf_counter() - t0, 3)
+        return out
+
+    rows = timed("kernels", lambda: throughput.kernel_sweep(full=False))
+    stream_rows = timed("streaming",
+                        lambda: throughput.streaming_bench(full=False))
+    serve_rows = timed("serve", lambda: throughput.serve_bench(full=False))
+    faults_rows = timed("serve_faults",
+                        lambda: throughput.serve_faults_bench(full=False))
+    plans = timed("plans", throughput.plan_rows)
     run = {"full": False, "rows": rows, "streaming": stream_rows,
            "serve": serve_rows, "serve_faults": faults_rows,
-           "plans": plans, "gate": True}
+           "plans": plans, "section_s": section_s, "gate": True}
     if not rows:
         raise GateError("kernel_sweep returned no rows — nothing to gate")
     cur = best_mbps(run)
@@ -110,6 +124,8 @@ def main() -> int:
                           for row in r.get("rows", []))]
     append_run(run, path)
 
+    print("bench gate: section wall time — "
+          + ", ".join(f"{k} {v:.1f}s" for k, v in section_s.items()))
     single = _section(run, "streaming", "single_shot")
     beststream = max((r["mbps"] for r in stream_rows
                       if r["variant"] != "single_shot"), default=0.0)

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI gate: lint + tier-1 test suite + a ~30 s interpret-mode kernel smoke
-# bench + a multi-tenant serve smoke + the benchmark-regression gate.
+# bench + a multi-tenant serve smoke + a traced-serve observability smoke
+# + the benchmark-regression gate.
 #
 #   bash scripts/ci.sh           # what .github/workflows/ci.yml runs
 #
@@ -201,6 +202,33 @@ print(f"chaos smoke: {tot['launch_errors']} launch errors, "
       f"sanitized, 1 tenant quarantined ({qbits.size} bits salvaged) — "
       f"3 healthy tenants bit-exact, health={tot['health']}")
 print("CHAOS_SMOKE_OK")
+EOF
+
+# ---- obs smoke: the chaos workload again, traced end to end. The demo
+# must emit a Chrome trace-event file that (a) parses, (b) contains the
+# nested push/launch/launch_attempt/retire spans plus the retry/degrade
+# recovery markers, and (c) pairs every async begin with an end — i.e.
+# the trace a human would load into Perfetto is actually well-formed.
+python examples/serve_viterbi.py --sessions 4 --chunks 3 --chaos \
+    --trace-out /tmp/obs_trace.json
+python - <<'EOF'
+import json
+obj = json.load(open("/tmp/obs_trace.json"))
+ev = obj["traceEvents"]
+names = {e["name"] for e in ev}
+for want in ("push", "launch", "launch_attempt", "retire", "retry",
+             "batch_pack", "plan_build"):
+    assert want in names, f"trace missing {want!r} spans: {sorted(names)}"
+for e in ev:
+    if e["ph"] == "X":
+        assert e["ts"] >= 0 and e["dur"] >= 0, e
+b = [e["id"] for e in ev if e["ph"] == "b"]
+e_ = [e["id"] for e in ev if e["ph"] == "e"]
+assert b and sorted(b) == sorted(e_), (len(b), len(e_))
+assert obj["otherData"]["counters"]["plan_cache_misses"] > 0
+print(f"obs smoke: {len(ev)} events, {len(b)} async pairs, "
+      f"spans {sorted(names - {'process_name'})}")
+print("OBS_SMOKE_OK")
 EOF
 
 python scripts/bench_gate.py

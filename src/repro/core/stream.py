@@ -306,7 +306,7 @@ class StreamDecoder:
 
     def __init__(self, cfg: DecoderConfig, chunk_frames: int, *,
                  depth: int = 1, mesh=None, decode_frames=None, cache=None,
-                 faults=None, sanitize: str = "zero"):
+                 faults=None, sanitize: str = "zero", trace=None):
         assert chunk_frames > 0 and depth >= 0
         self.cfg = cfg
         self.spec = cfg.spec
@@ -319,6 +319,15 @@ class StreamDecoder:
         if cache is None:
             from ..serve.plan_cache import PLAN_CACHE as cache
         self._cache = cache
+        # tracing hook (repro.obs): chunk dispatches become sync spans and
+        # each in-flight chunk an ASYNC span spanning dispatch ->
+        # materialize, so the double-buffer overlap is visible as
+        # concurrent spans in the exported trace. None resolves to the
+        # process-global tracer (a pay-nothing no-op unless enabled).
+        if trace is None:
+            from ..obs.tracer import get_tracer
+            trace = get_tracer()
+        self.trace = trace
         # fault-injection hook (repro.testing.faults) — None in production.
         # The single-stream front-end has no retry machinery: an injected
         # launch fault propagates to the caller (the multi-tenant server
@@ -347,40 +356,49 @@ class StreamDecoder:
         return self._cache.window_decoder(self.cfg, nframes, mesh=self.mesh)
 
     def _dispatch(self, w: Window):
-        if self._faults is not None:
-            self._faults.launch("stream")
-        bits = self._window_decoder(w.nframes)(jnp.asarray(w.window))
-        self._inflight.append((bits, w.n_bits))
+        with self.trace.span("dispatch", nframes=w.nframes,
+                             n_bits=w.n_bits):
+            if self._faults is not None:
+                self._faults.launch("stream")
+            bits = self._window_decoder(w.nframes)(jnp.asarray(w.window))
+        # async span: dispatch -> materialize; overlapping chunk spans ARE
+        # the double buffering, rendered as overlap by the Chrome exporter
+        self._inflight.append(
+            (bits, w.n_bits,
+             self.trace.begin("chunk", nframes=w.nframes, n_bits=w.n_bits)))
 
     def _drain(self, leave: int) -> list[np.ndarray]:
         out = []
         while len(self._inflight) > leave:
-            bits, n_bits = self._inflight.popleft()
+            bits, n_bits, chunk_span = self._inflight.popleft()
             out.append(np.asarray(bits)[:n_bits])   # blocks on OLDEST only
+            chunk_span.end()
         return out
 
     def push(self, llr) -> np.ndarray:
         """Feed soft symbols; returns the decoded bits of every chunk that
         has completed so far. The context validates the push shape and
         sanitizes NaN/Inf/out-of-range values (see StreamContext)."""
-        if self._faults is not None:
-            llr = self._faults.corrupt(llr)
-        self._ctx.append(llr)
-        out = []
-        for w in self._ctx.take_windows():
-            self._dispatch(w)
-            out.extend(self._drain(self.depth))
+        with self.trace.span("push"):
+            if self._faults is not None:
+                llr = self._faults.corrupt(llr)
+            self._ctx.append(llr)
+            out = []
+            for w in self._ctx.take_windows():
+                self._dispatch(w)
+                out.extend(self._drain(self.depth))
         return (np.concatenate(out) if out
                 else np.zeros((0,), np.int32))
 
     def flush(self) -> np.ndarray:
         """Decode the zero-padded tail, drain all in-flight chunks, and
         reset for the next stream. Returns the remaining decoded bits."""
-        w = self._ctx.flush_window()
-        if w is not None:
-            self._dispatch(w)
-        out = self._drain(0)
-        self._ctx.reset()
+        with self.trace.span("flush"):
+            w = self._ctx.flush_window()
+            if w is not None:
+                self._dispatch(w)
+            out = self._drain(0)
+            self._ctx.reset()
         return (np.concatenate(out) if out
                 else np.zeros((0,), np.int32))
 
@@ -390,8 +408,8 @@ class StreamDecoder:
 
 
 def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
-                        mesh=None, depth: int = 1,
-                        cache=None, faults=None) -> StreamDecoder:
+                        mesh=None, depth: int = 1, cache=None, faults=None,
+                        trace=None) -> StreamDecoder:
     """Build a StreamDecoder for ``cfg``.
 
     chunk_frames: frames per chunk; default comes from
@@ -404,6 +422,8 @@ def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
       double buffering; 0 = synchronous, for debugging).
     cache: plan cache override (default: the process-global PLAN_CACHE).
     faults: optional repro.testing.faults.FaultInjector (test harness).
+    trace: optional repro.obs.Tracer (None = the process-global tracer,
+      a no-op unless ``repro.obs.set_tracer`` enabled one).
     """
     num_devices = int(mesh.devices.size) if mesh is not None else 1
     if chunk_frames is None:
@@ -415,7 +435,7 @@ def make_stream_decoder(cfg: DecoderConfig, *, chunk_frames: int | None = None,
             num_devices=num_devices)
         chunk_frames = plan.chunk_frames
     return StreamDecoder(cfg, chunk_frames, depth=depth, mesh=mesh,
-                         cache=cache, faults=faults)
+                         cache=cache, faults=faults, trace=trace)
 
 
 def stream_decode(cfg: DecoderConfig, llr, n: int | None = None, *,

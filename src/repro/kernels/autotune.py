@@ -38,6 +38,7 @@ import math
 
 from ..core.framed import FrameSpec
 from ..core.trellis import Trellis
+from ..obs.tracer import get_tracer
 from .packing import Layout, packed_width
 
 __all__ = ["TilePlan", "DecodePlan", "mosaic_padded_bytes",
@@ -327,30 +328,45 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
     ``frames_per_tile`` pins the tile instead of autotuning it (the serve
     layer passes a session's explicit knob through here so the plan — and
     its padding accounting — matches the kernel that actually launches).
+
+    Every call runs under a ``plan_decode`` tracing span whose attributes
+    carry the chosen plan (kernel, layout, tile, chunk geometry) and the
+    predicted VMEM footprint vs budget — the trace file records *why* the
+    launch geometry is what it is.
     """
-    if frames_per_tile is not None:
-        spec.validate()
-        lay, mosaic = _resolve(
-            Layout.SUBLANE if layout == "auto" else layout, None)
-        model = unified_vmem_bytes if unified else split_vmem_bytes
-        total, breakdown = model(
-            trellis, spec, frames_per_tile, pack_survivors=pack_survivors,
-            radix=radix, layout=lay, bm_dtype=bm_dtype, mosaic=mosaic)
-        tile = TilePlan(int(frames_per_tile), total, breakdown, vmem_budget,
-                        "unified" if unified else "split", lay,
-                        str(bm_dtype), mosaic)
-    elif layout == "auto":
-        plans = [plan_tiles(trellis, spec, pack_survivors=pack_survivors,
-                            radix=radix, vmem_budget=vmem_budget,
-                            max_frames=max_frames, unified=unified,
-                            layout=lay, bm_dtype=bm_dtype, mosaic=True)
-                 for lay in (Layout.LANE, Layout.SUBLANE)]
-        tile = max(plans, key=lambda p: (p.frames_per_tile, -p.vmem_bytes))
-    else:
-        tile = plan_tiles(trellis, spec, pack_survivors=pack_survivors,
-                          radix=radix, vmem_budget=vmem_budget,
-                          max_frames=max_frames, unified=unified,
-                          layout=layout, bm_dtype=bm_dtype)
-    if chunk_frames is None:
-        chunk_frames = 2 * tile.frames_per_tile * num_devices
-    return DecodePlan(tile, pack_survivors, radix, chunk_frames, num_devices)
+    with get_tracer().span("plan_decode") as sp:
+        if frames_per_tile is not None:
+            spec.validate()
+            lay, mosaic = _resolve(
+                Layout.SUBLANE if layout == "auto" else layout, None)
+            model = unified_vmem_bytes if unified else split_vmem_bytes
+            total, breakdown = model(
+                trellis, spec, frames_per_tile, pack_survivors=pack_survivors,
+                radix=radix, layout=lay, bm_dtype=bm_dtype, mosaic=mosaic)
+            tile = TilePlan(int(frames_per_tile), total, breakdown,
+                            vmem_budget, "unified" if unified else "split",
+                            lay, str(bm_dtype), mosaic)
+        elif layout == "auto":
+            plans = [plan_tiles(trellis, spec, pack_survivors=pack_survivors,
+                                radix=radix, vmem_budget=vmem_budget,
+                                max_frames=max_frames, unified=unified,
+                                layout=lay, bm_dtype=bm_dtype, mosaic=True)
+                     for lay in (Layout.LANE, Layout.SUBLANE)]
+            tile = max(plans, key=lambda p: (p.frames_per_tile, -p.vmem_bytes))
+        else:
+            tile = plan_tiles(trellis, spec, pack_survivors=pack_survivors,
+                              radix=radix, vmem_budget=vmem_budget,
+                              max_frames=max_frames, unified=unified,
+                              layout=layout, bm_dtype=bm_dtype)
+        if chunk_frames is None:
+            chunk_frames = 2 * tile.frames_per_tile * num_devices
+        plan = DecodePlan(tile, pack_survivors, radix, chunk_frames,
+                          num_devices)
+        sp.set(kernel=tile.kernel, layout=Layout(tile.layout).value,
+               frames_per_tile=tile.frames_per_tile,
+               bm_dtype=str(tile.bm_dtype), chunk_frames=int(chunk_frames),
+               num_devices=int(num_devices), vmem_bytes=tile.vmem_bytes,
+               vmem_budget=tile.budget,
+               fits=tile.vmem_bytes <= tile.budget,
+               fingerprint=plan.fingerprint())
+        return plan

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from ..core.framed import FrameSpec
 from ..core.traceback import parallel_traceback_frames, serial_traceback_frames
 from ..core.trellis import Trellis
+from ..obs.tracer import get_tracer
 from .autotune import plan_tiles
 from .packing import Layout
 from .viterbi_fwd import forward_frames
@@ -95,6 +96,20 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
     f0 = spec.f0 if spec.parallel_tb else spec.f
     v2s = spec.v2s if spec.parallel_tb else spec.v2
     start = spec.start if spec.parallel_tb else "boundary"
+
+    # This function body runs at jit *trace* time only — so this event
+    # marks each real XLA compile of a decode program (re-launches of the
+    # cached executable never reach here). One glance at a trace file
+    # answers "how many distinct kernels did this run compile, and with
+    # which knobs?".
+    trace = get_tracer()
+    trace.event("kernel_trace", kernel="unified" if unified else "split",
+                frames=int(frames.shape[0]),
+                frames_per_tile=int(frames_per_tile), layout=lay.value,
+                bm_dtype=str(bm_dtype), radix=int(radix),
+                pack_survivors=bool(pack_survivors),
+                interpret=bool(interpret))
+    trace.count("kernel_traces")
 
     padded, F = _pad_frames(frames, frames_per_tile)
     if unified:

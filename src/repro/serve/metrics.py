@@ -1,13 +1,30 @@
-"""Per-bucket serving metrics: latency percentiles, batch occupancy, and
-fault-tolerance health counters.
+"""Per-bucket serving metrics: latency percentiles, batch occupancy,
+derived throughput, stage-latency breakdowns, and fault-tolerance health
+counters.
 
 The serve layer's whole reason to exist is batch occupancy — the kernels
 only hit their throughput at high frame counts per launch — so the
 metrics are organized around the launch: how many frames of each batched
 launch carried live session data vs padding, and how long each window
-waited between enqueue (push) and materialized bits. Latencies are plain
-host wall-clock samples; percentiles are computed on demand so recording
-stays O(1) per window.
+waited between enqueue (push) and materialized bits. Latencies land in
+fixed-bucket histograms (repro.obs.hist): recording stays O(1) per
+window, ``totals()`` aggregates by merging bucket histograms in
+O(buckets x bucket-count) instead of re-concatenating every retained
+sample, and memory is O(buckets) no matter how long the server lives.
+The ``p50_ms``/``p99_ms`` snapshot keys are unchanged (same names, same
+rounding) so recorded BENCH_kernels.json serve rows stay comparable;
+their values are now bucket-resolution percentiles (~19% geometric
+buckets, exact for degenerate distributions).
+
+Each bucket (and the server total) also derives throughput from a
+monotonic epoch: ``uptime_s`` since the bucket/server first existed and
+``mbps`` = decoded bits / uptime — so front-ends stop hand-computing
+aggregate rates around their own loops.
+
+``stage(name)`` returns the server-wide histogram for one pipeline stage
+(queue_wait / batch_pack / launch / retire, in ms); the snapshot carries
+their summaries as the stage-latency breakdown the tracing layer's spans
+drill into.
 
 Since the fault-tolerance layer, each bucket also tracks its failure
 story: launch errors and deadline timeouts, retries, launches that
@@ -22,17 +39,15 @@ compiled fast path).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import time
 
 import numpy as np
 
-__all__ = ["BucketMetrics", "ServeMetrics", "percentile", "LATENCY_SAMPLES",
-           "FAULT_COUNTERS"]
+from ..obs.hist import Histogram
 
-#: Latency samples retained per bucket (rolling window — a long-running
-#: server keeps O(1) memory; percentiles describe recent traffic).
-LATENCY_SAMPLES = 4096
+__all__ = ["BucketMetrics", "ServeMetrics", "percentile", "FAULT_COUNTERS",
+           "STAGES"]
 
 #: Counter fields summed into ``ServeMetrics.totals()`` and carried in
 #: every snapshot row (the robustness-observability contract).
@@ -40,9 +55,15 @@ FAULT_COUNTERS = ("launch_errors", "timeouts", "retries", "degraded",
                   "cache_refreshes", "poisoned_pushes", "sanitized_values",
                   "quarantined")
 
+#: Pipeline stages with a server-wide latency histogram (all in ms; the
+#: tracing spans of the same names carry the per-occurrence detail).
+STAGES = ("queue_wait_ms", "batch_pack_ms", "launch_ms", "retire_ms")
+
 
 def percentile(samples, p: float) -> float:
-    """p-th percentile of ``samples`` (0.0 when empty)."""
+    """Exact p-th percentile of raw ``samples`` (0.0 when empty) — kept
+    for tests/tools that hold their own sample lists; the serve rows
+    themselves are histogram-backed now."""
     if not len(samples):
         return 0.0
     return float(np.percentile(np.asarray(samples, np.float64), p))
@@ -67,8 +88,9 @@ class BucketMetrics:
     sanitized_values: int = 0         # LLR values scrubbed/clamped
     quarantined: int = 0              # sessions quarantined (cumulative)
     last_error: str = ""              # most recent fault, human-readable
-    latency_ms: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=LATENCY_SAMPLES))
+    latency: Histogram = dataclasses.field(
+        default_factory=Histogram.latency_ms)
+    t0: float = dataclasses.field(default_factory=time.perf_counter)
 
     def record_launch(self, live_frames: int, pad_frames: int, windows: int,
                       bits: int, window_latency_ms) -> None:
@@ -77,12 +99,17 @@ class BucketMetrics:
         self.pad_frames += pad_frames
         self.windows += windows
         self.bits += bits
-        self.latency_ms.extend(float(t) for t in window_latency_ms)
+        self.latency.extend(float(t) for t in window_latency_ms)
 
     def record_fault(self, counter: str, error: str = "", n: int = 1) -> None:
         """Bump one fault counter (a FAULT_COUNTERS name); remember the
-        most recent error string for the snapshot."""
-        assert counter in FAULT_COUNTERS, counter
+        most recent error string for the snapshot. An unknown counter
+        name is a real ValueError — this is the fault-accounting contract
+        and must not vanish under ``python -O`` the way an assert would."""
+        if counter not in FAULT_COUNTERS:
+            raise ValueError(
+                f"unknown fault counter {counter!r}; expected one of "
+                f"{FAULT_COUNTERS}")
         setattr(self, counter, getattr(self, counter) + n)
         if error:
             self.last_error = error
@@ -92,6 +119,17 @@ class BucketMetrics:
         """Live fraction of launched frames (1.0 = perfectly packed)."""
         total = self.frames + self.pad_frames
         return self.frames / total if total else 0.0
+
+    @property
+    def uptime_s(self) -> float:
+        """Monotonic seconds since this bucket first saw a session."""
+        return time.perf_counter() - self.t0
+
+    @property
+    def mbps(self) -> float:
+        """Decoded Mb/s over the bucket's lifetime."""
+        dt = self.uptime_s
+        return self.bits / dt / 1e6 if dt > 0 else 0.0
 
     @property
     def health(self) -> str:
@@ -105,10 +143,10 @@ class BucketMetrics:
         return "ok"
 
     def p50_ms(self) -> float:
-        return percentile(self.latency_ms, 50)
+        return self.latency.percentile(50)
 
     def p99_ms(self) -> float:
-        return percentile(self.latency_ms, 99)
+        return self.latency.percentile(99)
 
     def snapshot(self) -> dict:
         """JSON-ready row (benchmarks/trajectory 'serve' section shape)."""
@@ -118,6 +156,8 @@ class BucketMetrics:
                "occupancy": round(self.occupancy, 4),
                "p50_ms": round(self.p50_ms(), 3),
                "p99_ms": round(self.p99_ms(), 3),
+               "mbps": round(self.mbps, 4),
+               "uptime_s": round(self.uptime_s, 3),
                "health": self.health}
         row.update({c: getattr(self, c) for c in FAULT_COUNTERS})
         if self.last_error:
@@ -126,16 +166,30 @@ class BucketMetrics:
 
 
 class ServeMetrics:
-    """All buckets of one DecodeServer."""
+    """All buckets of one DecodeServer, plus the server-wide stage
+    histograms and the throughput epoch."""
 
     def __init__(self):
         self._buckets: dict[str, BucketMetrics] = {}
+        self._stages: dict[str, Histogram] = {}
+        self.t0 = time.perf_counter()
 
     def bucket(self, bucket_id: str) -> BucketMetrics:
         m = self._buckets.get(bucket_id)
         if m is None:
             m = self._buckets[bucket_id] = BucketMetrics(bucket_id)
         return m
+
+    def stage(self, name: str) -> Histogram:
+        """The server-wide latency histogram for one pipeline stage."""
+        h = self._stages.get(name)
+        if h is None:
+            h = self._stages[name] = Histogram.latency_ms()
+        return h
+
+    def stage_snapshot(self) -> dict:
+        """{stage: summary} — the stage-latency breakdown rows."""
+        return {name: h.snapshot() for name, h in self._stages.items()}
 
     def __iter__(self):
         return iter(self._buckets.values())
@@ -144,15 +198,20 @@ class ServeMetrics:
         return [m.snapshot() for m in self._buckets.values()]
 
     def totals(self) -> dict:
-        lat = [t for m in self for t in m.latency_ms]
+        lat = Histogram.latency_ms()
+        for m in self:
+            lat.merge(m.latency)
         frames = sum(m.frames for m in self)
         pad = sum(m.pad_frames for m in self)
+        bits = sum(m.bits for m in self)
+        uptime = time.perf_counter() - self.t0
         out = {"launches": sum(m.launches for m in self),
                "windows": sum(m.windows for m in self),
-               "frames": frames, "pad_frames": pad,
-               "bits": sum(m.bits for m in self),
+               "frames": frames, "pad_frames": pad, "bits": bits,
                "occupancy": frames / (frames + pad) if frames + pad else 0.0,
-               "p50_ms": percentile(lat, 50), "p99_ms": percentile(lat, 99)}
+               "p50_ms": lat.percentile(50), "p99_ms": lat.percentile(99),
+               "uptime_s": round(uptime, 3),
+               "mbps": round(bits / uptime / 1e6 if uptime > 0 else 0.0, 4)}
         out.update({c: sum(getattr(m, c) for m in self)
                     for c in FAULT_COUNTERS})
         healths = [m.health for m in self]

@@ -35,11 +35,13 @@ nframes) bucket, no matter how many sessions come and go.
 from __future__ import annotations
 
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
 
 from ..core.pipeline import DecoderConfig, _build_frame_decoder
+from ..obs.tracer import get_tracer
 
 __all__ = ["PlanCache", "PLAN_CACHE", "build_window_fn"]
 
@@ -76,37 +78,50 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.traces = 0
+        self.build_ms = 0.0
 
     # -- bookkeeping ------------------------------------------------------
     def _get(self, key, build, refresh: bool = False):
         """Cached build. ``refresh=True`` drops any existing entry first —
         the fault-injection harness uses it to force the cold path (an
-        evicted / never-compiled plan) on a live server."""
+        evicted / never-compiled plan) on a live server. Misses time the
+        build under a ``plan_build`` span; hits/misses bump the tracer's
+        counters so a trace file alone tells the cache story."""
+        trace = get_tracer()
         with self._lock:
             if refresh:
                 self._fns.pop(key, None)
             fn = self._fns.get(key)
             if fn is not None:
                 self.hits += 1
+                trace.count("plan_cache_hits")
                 return fn
             self.misses += 1
-        fn = build()                            # build outside the lock
+            trace.count("plan_cache_misses")
+        t0 = time.perf_counter()
+        with trace.span("plan_build", kind=str(key[0])):
+            fn = build()                        # build outside the lock
+        dt_ms = (time.perf_counter() - t0) * 1e3
         with self._lock:
+            self.build_ms += dt_ms
             return self._fns.setdefault(key, fn)
 
     def _mark_trace(self):
         with self._lock:
             self.traces += 1
+        get_tracer().count("plan_cache_traces")
 
     def stats(self) -> dict:
         with self._lock:
             return {"entries": len(self._fns), "hits": self.hits,
-                    "misses": self.misses, "traces": self.traces}
+                    "misses": self.misses, "traces": self.traces,
+                    "build_ms": round(self.build_ms, 3)}
 
     def clear(self):
         with self._lock:
             self._fns.clear()
             self.hits = self.misses = self.traces = 0
+            self.build_ms = 0.0
 
     # -- entries ----------------------------------------------------------
     def frame_decoder(self, cfg: DecoderConfig, mesh=None):

@@ -14,6 +14,11 @@ Scheduling is FIFO over each bucket's window queue (arrival order ==
 round-robin when sessions push at similar rates); the server pops up to
 ``slots`` windows per bucket per step and pads the rest of the fixed
 ``slots * chunk_frames`` batch with zero frames.
+
+Each ``PendingWindow`` stamps ``t_enq`` at enqueue; the server turns
+(take time - t_enq) into the ``queue_wait_ms`` stage histogram
+(serve.metrics.STAGES) and the end-to-end window latency at retire — the
+queue is where a window's latency story starts.
 """
 from __future__ import annotations
 
@@ -50,7 +55,8 @@ class PendingWindow:
     session: "Session"
     frames: np.ndarray            # (chunk_frames, L, beta) float32
     n_bits: int                   # real bits (tail windows carry padding)
-    t_enq: float                  # perf_counter at enqueue (latency metric)
+    t_enq: float                  # perf_counter at enqueue: queue_wait_ms
+                                  # stage + end-to-end latency both start here
 
 
 @dataclasses.dataclass

@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from ..core.pipeline import DecoderConfig
 from ..core.sanitize import LLR_CLIP, sanitize_llr
 from ..core.stream import StreamContext
+from ..obs.tracer import get_tracer
 from .metrics import ServeMetrics
 from .plan_cache import PLAN_CACHE, PlanCache
 from .scheduler import Bucket, Session, bucket_plan
@@ -169,6 +170,10 @@ class DecodeServer:
                   quarantined.
     faults:       optional repro.testing.faults.FaultInjector (tests/CI
                   chaos only; None in production).
+    trace:        optional repro.obs.Tracer recording push/launch/retry/
+                  retire spans and stage latencies. None (default)
+                  resolves to the process-global tracer — a pay-nothing
+                  no-op unless ``repro.obs.set_tracer`` enabled one.
     """
 
     def __init__(self, *, slots: int = 4, max_sessions: int = 64,
@@ -177,7 +182,7 @@ class DecodeServer:
                  launch_timeout_s: float | None = None,
                  max_retries: int = 2, backoff_s: float = 0.01,
                  sanitize: str = "zero", llr_clip: float = LLR_CLIP,
-                 quarantine_after: int = 3, faults=None):
+                 quarantine_after: int = 3, faults=None, trace=None):
         assert slots > 0 and max_sessions > 0 and queue_depth > 0
         assert depth >= 0
         assert max_retries >= 0 and backoff_s >= 0.0
@@ -196,6 +201,7 @@ class DecodeServer:
         self.llr_clip = llr_clip
         self.quarantine_after = quarantine_after
         self.faults = faults
+        self.trace = trace if trace is not None else get_tracer()
         self.metrics = ServeMetrics()
         self._sessions: dict[int, Session] = {}
         self._buckets: dict[tuple, Bucket] = {}
@@ -293,20 +299,21 @@ class DecodeServer:
         if session.quarantined is not None:
             raise SessionQuarantined(sid, session.quarantined,
                                      session.strikes)
-        if self.faults is not None:
-            llr = self.faults.corrupt(llr, sid=sid)
-        llr = self._validate_push(session, llr)
-        projected = session.ctx.projected_windows(
-            session.ctx.incoming_stages(llr))
-        if session.inflight + projected > self.queue_depth:
-            overshoot = session.inflight + projected - self.queue_depth
-            raise Backpressure(
-                f"session {sid}: {session.inflight} windows pending + "
-                f"{projected} in this push > queue_depth="
-                f"{self.queue_depth}; call step() and retry (or split "
-                f"pushes larger than queue_depth chunks)",
-                retry_after_steps=max(1, -(-overshoot // self.slots)))
-        session.absorb(llr)
+        with self.trace.span("push", sid=sid, bucket=session.bucket.id) as sp:
+            if self.faults is not None:
+                llr = self.faults.corrupt(llr, sid=sid)
+            llr = self._validate_push(session, llr)
+            projected = session.ctx.projected_windows(
+                session.ctx.incoming_stages(llr))
+            if session.inflight + projected > self.queue_depth:
+                overshoot = session.inflight + projected - self.queue_depth
+                raise Backpressure(
+                    f"session {sid}: {session.inflight} windows pending + "
+                    f"{projected} in this push > queue_depth="
+                    f"{self.queue_depth}; call step() and retry (or split "
+                    f"pushes larger than queue_depth chunks)",
+                    retry_after_steps=max(1, -(-overshoot // self.slots)))
+            sp.set(windows=session.absorb(llr))
 
     def step(self) -> int:
         """One batched launch per bucket with pending windows, dispatched
@@ -331,8 +338,21 @@ class DecodeServer:
         taken = bucket.take(self.slots)
         if not taken:
             return 0
-        batch = np.concatenate([w.frames for w in taken])
-        self._dispatch(bucket, batch, taken)
+        t_take = time.perf_counter()
+        wait = self.metrics.stage("queue_wait_ms")
+        for w in taken:
+            wait.record((t_take - w.t_enq) * 1e3)
+        with self.trace.span("launch", bucket=bucket.id,
+                             windows=len(taken)) as sp:
+            with self.trace.span("batch_pack", bucket=bucket.id):
+                batch = np.concatenate([w.frames for w in taken])
+            t_pack = time.perf_counter()
+            self.metrics.stage("batch_pack_ms").record(
+                (t_pack - t_take) * 1e3)
+            sp.set(frames=int(batch.shape[0]))
+            self._dispatch(bucket, batch, taken)
+            self.metrics.stage("launch_ms").record(
+                (time.perf_counter() - t_pack) * 1e3)
         self._retire(bucket, self.depth)
         return len(taken)
 
@@ -356,21 +376,27 @@ class DecodeServer:
         for attempt in range(self.max_retries + 1):
             t0 = time.perf_counter()
             try:
-                if self.faults is not None:
-                    self.faults.launch(bucket.id)
-                refresh = (self.faults is not None
-                           and self.faults.plan_cache_miss())
-                if refresh:
-                    bm.record_fault("cache_refreshes")
-                fn = self.cache.batch_decoder(bucket.decode_cfg, B,
-                                              mesh=self.mesh, refresh=refresh)
-                out = fn(dev)
-                if deadline is not None \
-                        and time.perf_counter() - t0 > deadline:
-                    raise LaunchTimeout(
-                        f"bucket {bucket.id}: launch exceeded "
-                        f"{deadline * 1e3:.1f} ms deadline")
-                bucket.inflight.append((out, taken, batch))
+                with self.trace.span("launch_attempt", bucket=bucket.id,
+                                     attempt=attempt):
+                    if self.faults is not None:
+                        self.faults.launch(bucket.id)
+                    refresh = (self.faults is not None
+                               and self.faults.plan_cache_miss())
+                    if refresh:
+                        bm.record_fault("cache_refreshes")
+                    fn = self.cache.batch_decoder(bucket.decode_cfg, B,
+                                                  mesh=self.mesh,
+                                                  refresh=refresh)
+                    out = fn(dev)
+                    if deadline is not None \
+                            and time.perf_counter() - t0 > deadline:
+                        raise LaunchTimeout(
+                            f"bucket {bucket.id}: launch exceeded "
+                            f"{deadline * 1e3:.1f} ms deadline")
+                bucket.inflight.append(
+                    (out, taken, batch,
+                     self.trace.begin("inflight", bucket=bucket.id,
+                                      frames=B)))
                 return
             except LaunchTimeout as e:
                 bm.record_fault("timeouts", error=str(e))
@@ -378,13 +404,18 @@ class DecodeServer:
                 bm.record_fault("launch_errors", error=repr(e))
             if attempt < self.max_retries:
                 bm.record_fault("retries")
+                self.trace.event("retry", bucket=bucket.id, attempt=attempt)
                 if self.backoff_s:
                     time.sleep(self.backoff_s * (2 ** attempt))
         # retries exhausted: degrade to the reference fallback so healthy
         # sessions still get (correct) bits — never drop the batch
         bm.record_fault("degraded")
-        bucket.inflight.append((self._ref_fallback(bucket, B)(dev),
-                                taken, batch))
+        with self.trace.span("degrade", bucket=bucket.id, frames=B):
+            out = self._ref_fallback(bucket, B)(dev)
+        bucket.inflight.append(
+            (out, taken, batch,
+             self.trace.begin("inflight", bucket=bucket.id, frames=B,
+                              degraded=True)))
 
     def _retire(self, bucket: Bucket, leave: int) -> int:
         """Materialize in-flight launches down to ``leave`` (blocks on the
@@ -396,35 +427,43 @@ class DecodeServer:
         deadline = self.launch_timeout_s
         done = 0
         while len(bucket.inflight) > leave:
-            bits_dev, taken, batch = bucket.inflight.popleft()
+            bits_dev, taken, batch, inflight_span = bucket.inflight.popleft()
             t0 = time.perf_counter()
-            try:
-                bits = np.asarray(bits_dev)             # (k*C, f)
-            except Exception as e:                      # noqa: BLE001
-                bm.record_fault("launch_errors", error=repr(e))
-                bm.record_fault("degraded")
-                bits = np.asarray(
-                    self._ref_fallback(bucket, batch.shape[0])(
-                        jnp.asarray(batch)))
-            t_done = time.perf_counter()
-            if deadline is not None and t_done - t0 > deadline:
-                # cooperative deadline: a hang shows up here; record it
-                # (the NEXT launch's retry path is where recovery happens)
-                bm.record_fault("timeouts",
-                                error=f"bucket {bucket.id}: materialize "
-                                      f"took {(t_done - t0) * 1e3:.1f} ms")
-            n_bits = live = 0
-            for i, w in enumerate(taken):
-                out = bits[i * C:(i + 1) * C].reshape(-1)[:w.n_bits]
-                w.session.ready.append(out.astype(np.int32, copy=False))
-                n_bits += w.n_bits
-                live += min(C, -(-w.n_bits // f))       # real frames only
-            B = len(taken) * C
-            bm.record_launch(
-                live_frames=live,                       # zero tail frames
-                pad_frames=B - live + bucket.tile_pad(B),  # count as pad
-                windows=len(taken), bits=n_bits,
-                window_latency_ms=[(t_done - w.t_enq) * 1e3 for w in taken])
+            with self.trace.span("retire", bucket=bucket.id,
+                                 windows=len(taken)):
+                try:
+                    bits = np.asarray(bits_dev)         # (k*C, f)
+                except Exception as e:                  # noqa: BLE001
+                    bm.record_fault("launch_errors", error=repr(e))
+                    bm.record_fault("degraded")
+                    with self.trace.span("degrade", bucket=bucket.id):
+                        bits = np.asarray(
+                            self._ref_fallback(bucket, batch.shape[0])(
+                                jnp.asarray(batch)))
+                t_done = time.perf_counter()
+                inflight_span.end()
+                self.metrics.stage("retire_ms").record((t_done - t0) * 1e3)
+                if deadline is not None and t_done - t0 > deadline:
+                    # cooperative deadline: a hang shows up here; record it
+                    # (the NEXT launch's retry path is where recovery
+                    # happens)
+                    bm.record_fault(
+                        "timeouts",
+                        error=f"bucket {bucket.id}: materialize "
+                              f"took {(t_done - t0) * 1e3:.1f} ms")
+                n_bits = live = 0
+                for i, w in enumerate(taken):
+                    out = bits[i * C:(i + 1) * C].reshape(-1)[:w.n_bits]
+                    w.session.ready.append(out.astype(np.int32, copy=False))
+                    n_bits += w.n_bits
+                    live += min(C, -(-w.n_bits // f))   # real frames only
+                B = len(taken) * C
+                bm.record_launch(
+                    live_frames=live,                   # zero tail frames
+                    pad_frames=B - live + bucket.tile_pad(B),  # as pad
+                    windows=len(taken), bits=n_bits,
+                    window_latency_ms=[(t_done - w.t_enq) * 1e3
+                                       for w in taken])
             done += len(taken)
         return done
 
@@ -478,13 +517,17 @@ class DecodeServer:
         return list(self._buckets.values())
 
     def metrics_snapshot(self) -> dict:
-        """Per-bucket rows + totals + plan-cache stats, JSON-ready (the
-        shape the benchmarks' 'serve' section records). Totals carry the
-        fault counters and overall health; ``quarantined_sessions``
-        counts live quarantined sessions; ``faults`` reports the
-        injector's schedule counters when one is attached."""
+        """Per-bucket rows + totals + stage-latency breakdowns +
+        plan-cache stats, JSON-ready (the shape the benchmarks' 'serve'
+        section records). Totals carry the fault counters, derived
+        throughput (``mbps``/``uptime_s``) and overall health;
+        ``stages`` holds the queue-wait/pack/launch/retire latency
+        summaries; ``quarantined_sessions`` counts live quarantined
+        sessions; ``faults`` reports the injector's schedule counters
+        when one is attached."""
         snap = {"buckets": self.metrics.snapshot(),
                 "totals": self.metrics.totals(),
+                "stages": self.metrics.stage_snapshot(),
                 "plan_cache": self.cache.stats(),
                 "sessions": len(self._sessions),
                 "quarantined_sessions": sum(

@@ -1,0 +1,386 @@
+"""Observability layer (repro.obs): span nesting and attributes, the
+pay-nothing disabled tracer, histogram percentile accuracy vs
+np.percentile, Chrome trace-event schema validity, Prometheus
+parseability, and the end-to-end instrumentation of the serve/stream
+pipeline (nested launch spans, async chunk overlap, plan_decode
+attributes, trace-time kernel events)."""
+import json
+import re
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import (Histogram, NULL_TRACER, Tracer, chrome_trace,
+                       geometric_bounds, get_tracer, prometheus_text,
+                       set_tracer, write_chrome_trace)
+from repro.obs.tracer import NullTracer
+
+
+@pytest.fixture(autouse=True)
+def _restore_global_tracer():
+    """Every test leaves the process-global tracer disabled — a leaked
+    enabled tracer would silently record the rest of the suite."""
+    yield
+    set_tracer(None)
+
+
+# ---------------------------------------------------------------- tracer
+
+def test_span_nesting_parent_and_attrs():
+    t = Tracer()
+    with t.span("outer", a=1):
+        with t.span("inner") as sp:
+            sp.set(b="two")
+    recs = {r.name: r for r in t.spans()}
+    assert recs["inner"].parent == "outer"
+    assert recs["outer"].parent is None
+    assert recs["inner"].attrs == {"b": "two"}
+    assert recs["outer"].attrs == {"a": 1}
+    assert recs["outer"].dur >= recs["inner"].dur >= 0.0
+    # inner completed first, so it is recorded first
+    assert [r.name for r in t.spans()] == ["inner", "outer"]
+
+
+def test_span_records_error_attr_on_exception():
+    t = Tracer()
+    with pytest.raises(RuntimeError):
+        with t.span("boom"):
+            raise RuntimeError("x")
+    (rec,) = t.spans()
+    assert rec.attrs["error"] == "RuntimeError"
+
+
+def test_async_spans_overlap_and_end_is_idempotent():
+    t = Tracer()
+    a = t.begin("chunk", i=0)
+    b = t.begin("chunk", i=1)
+    b.end(bits=64)
+    a.end()
+    a.end()                                     # second end: no-op
+    recs = t.spans()
+    assert len(recs) == 2
+    assert all(r.kind == "async" for r in recs)
+    assert recs[0].sid != recs[1].sid           # distinct pairing ids
+    assert recs[0].attrs == {"i": 1, "bits": 64}
+
+
+def test_events_and_counters():
+    t = Tracer()
+    with t.span("launch"):
+        t.event("retry", attempt=1)
+    t.count("hits")
+    t.count("hits", 2)
+    (ev, sp) = t.spans()
+    assert (ev.kind, ev.dur, ev.parent) == ("instant", 0.0, "launch")
+    assert t.counters() == {"hits": 3}
+    t.clear()
+    assert t.spans() == [] and t.counters() == {}
+
+
+def test_ring_buffer_caps_retained_spans():
+    t = Tracer(capacity=8)
+    for i in range(20):
+        with t.span("s", i=i):
+            pass
+    recs = t.spans()
+    assert len(recs) == 8
+    assert [r.attrs["i"] for r in recs] == list(range(12, 20))
+
+
+def test_tracer_is_thread_safe():
+    t = Tracer()
+
+    def work(k):
+        for i in range(200):
+            with t.span("w", k=k):
+                t.count("n")
+
+    threads = [threading.Thread(target=work, args=(k,)) for k in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert t.counters()["n"] == 800
+    assert len(t.spans()) == 800
+    # nesting state is per-thread: every span is a root in its own thread
+    assert all(r.parent is None for r in t.spans())
+
+
+def test_null_tracer_pays_nothing():
+    """The disabled path returns ONE shared no-op object — no allocation
+    per call — and records nothing."""
+    n = NullTracer()
+    assert n.span("a") is n.span("b")
+    assert n.begin("a") is n.span("b")
+    with n.span("a") as sp:
+        sp.set(x=1)
+    n.begin("c").end()
+    n.event("e")
+    n.count("k")
+    assert n.spans() == [] and n.counters() == {}
+    assert not n.enabled
+
+
+def test_global_registry_set_get_restore():
+    assert get_tracer() is NULL_TRACER
+    t = Tracer()
+    prev = set_tracer(t)
+    assert prev is NULL_TRACER
+    assert get_tracer() is t
+    assert set_tracer(None) is t
+    assert get_tracer() is NULL_TRACER
+
+
+# ------------------------------------------------------------- histogram
+
+def test_histogram_percentiles_track_np_percentile():
+    rng = np.random.default_rng(0)
+    samples = np.exp(rng.normal(1.0, 1.2, size=5000))   # lognormal ms
+    h = Histogram.latency_ms()
+    h.extend(samples)
+    for p in (50, 90, 99):
+        exact = float(np.percentile(samples, p))
+        got = h.percentile(p)
+        # geometric buckets at ratio 2**0.25 => <=~19% bucket resolution
+        assert abs(got - exact) / exact < 0.25, (p, got, exact)
+    assert h.count == 5000
+    assert abs(h.mean() - samples.mean()) / samples.mean() < 1e-6
+
+
+def test_histogram_degenerate_distribution_is_exact():
+    h = Histogram.latency_ms()
+    h.extend([3.7] * 100)
+    assert h.percentile(50) == pytest.approx(3.7)
+    assert h.percentile(99) == pytest.approx(3.7)
+    snap = h.snapshot()
+    assert snap["count"] == 100 and snap["max"] == pytest.approx(3.7)
+
+
+def test_histogram_empty_merge_and_bounds_mismatch():
+    h = Histogram.latency_ms()
+    assert h.percentile(99) == 0.0 and h.mean() == 0.0
+    other = Histogram.latency_ms()
+    other.extend([1.0, 2.0])
+    h.merge(other)
+    assert h.count == 2 and h.vmax == 2.0
+    with pytest.raises(ValueError):
+        h.merge(Histogram.sizes())
+
+
+def test_geometric_bounds_cover_range():
+    b = geometric_bounds(1.0, 100.0, 2.0)
+    assert b[0] == 1.0 and b[-1] >= 100.0
+    assert all(y == 2 * x for x, y in zip(b, b[1:]))
+
+
+# ------------------------------------------------------------- exporters
+
+def test_chrome_trace_schema_and_async_pairing(tmp_path):
+    t = Tracer()
+    with t.span("launch", bucket="b0"):
+        with t.span("batch_pack"):
+            pass
+        t.event("retry", attempt=1)
+    h = t.begin("inflight", frames=8)
+    h.end()
+    t.count("plan_cache_hits", 3)
+    path = tmp_path / "trace.json"
+    write_chrome_trace(t, str(path))
+    obj = json.loads(path.read_text())          # valid JSON on disk
+    ev = obj["traceEvents"]
+    xs = [e for e in ev if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"launch", "batch_pack"}
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    pack = next(e for e in xs if e["name"] == "batch_pack")
+    assert pack["args"]["parent"] == "launch"
+    begins = [e for e in ev if e["ph"] == "b"]
+    ends = [e for e in ev if e["ph"] == "e"]
+    assert len(begins) == len(ends) == 1
+    assert begins[0]["id"] == ends[0]["id"]
+    (inst,) = [e for e in ev if e["ph"] == "i"]
+    assert inst["name"] == "retry"
+    assert obj["otherData"]["counters"] == {"plan_cache_hits": 3}
+
+
+def test_chrome_trace_stringifies_exotic_attr_values():
+    t = Tracer()
+    with t.span("s", shape=(4, 2), arr=np.arange(2)):
+        pass
+    obj = chrome_trace(t)
+    args = obj["traceEvents"][-1]["args"]
+    assert args["shape"] == "(4, 2)"
+    assert isinstance(args["arr"], str)
+    json.dumps(obj)                             # everything serializable
+
+
+_EXPO_LINE = re.compile(
+    r'^(# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* (counter|gauge)'
+    r'|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z0-9_]+="[^"]*"'
+    r'(,[a-zA-Z0-9_]+="[^"]*")*\})? -?[0-9.e+-]+)$')
+
+
+def test_prometheus_text_parses_line_by_line():
+    snap = {"totals": {"launches": 4, "mbps": 1.25, "health": "ok"},
+            "sessions": 2,
+            "buckets": [{"bucket": "K7-f64", "launches": 4,
+                         "p50_ms": 0.5, "last_error": "boom \"q\""}],
+            "stages": {"launch_ms": {"count": 4, "p50": 0.4, "p99": 0.9,
+                                     "max": 1.0, "mean": 0.5, "total": 2.0}},
+            "plan_cache": {"entries": 2, "hits": 5, "misses": 2,
+                           "traces": 2, "build_ms": 1.5}}
+    text = prometheus_text(snap)
+    lines = text.strip().split("\n")
+    assert lines, "empty exposition"
+    for line in lines:
+        assert _EXPO_LINE.match(line), f"unparseable line: {line!r}"
+    assert "# TYPE repro_serve_launches counter" in lines
+    assert "repro_serve_mbps 1.25" in lines
+    assert any(l.startswith('repro_serve_bucket_launches{bucket="K7-f64"}')
+               for l in lines)
+    assert any('stage="launch_ms"' in l and 'stat="p99"' in l
+               for l in lines)
+    # non-numeric fields (health, last_error) never reach the exposition
+    assert "health" not in text and "boom" not in text
+
+
+# -------------------------------------------------- pipeline integration
+
+def _serve_workload(trace, faults=None, **srv_kw):
+    from repro.core import DecoderConfig, FrameSpec
+    from repro.serve import DecodeServer, PlanCache
+    spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    cfg = DecoderConfig(spec=spec)
+    rng = np.random.default_rng(0)
+    n = 2 * 5 * spec.f
+    rx = rng.standard_normal((n, 2)).astype(np.float32)
+    srv = DecodeServer(slots=2, cache=PlanCache(), trace=trace,
+                       faults=faults, **srv_kw)
+    sids = [srv.open_session(cfg, chunk_frames=5) for _ in range(2)]
+    for r in range(2):
+        for sid in sids:
+            srv.push(sid, rx[r * (n // 2):(r + 1) * (n // 2)])
+        while srv.step():
+            pass
+    return srv, sids
+
+
+def test_server_spans_nest_and_stage_breakdown_lands_in_snapshot():
+    t = Tracer()
+    srv, sids = _serve_workload(t)
+    for sid in sids:
+        srv.close_session(sid)
+    names = {r.name for r in t.spans()}
+    assert {"push", "launch", "batch_pack", "launch_attempt",
+            "retire", "inflight"} <= names
+    by_name = {}
+    for r in t.spans():
+        by_name.setdefault(r.name, []).append(r)
+    assert all(r.parent == "launch" for r in by_name["batch_pack"])
+    assert all(r.parent == "launch" for r in by_name["launch_attempt"])
+    assert all(r.kind == "async" for r in by_name["inflight"])
+    snap = srv.metrics_snapshot()
+    stages = snap["stages"]
+    for stage in ("queue_wait_ms", "batch_pack_ms", "launch_ms",
+                  "retire_ms"):
+        assert stages[stage]["count"] > 0, stage
+    tot = snap["totals"]
+    assert tot["mbps"] > 0 and tot["uptime_s"] > 0
+    assert all(row["uptime_s"] > 0 for row in snap["buckets"])
+
+
+def test_server_retry_and_degrade_spans_under_faults():
+    from repro.testing import FaultInjector, FaultSpec
+    t = Tracer()
+    faults = FaultInjector(FaultSpec("launch_error", every=1), seed=0)
+    srv, sids = _serve_workload(t, faults=faults, max_retries=1,
+                                backoff_s=0.0)
+    for sid in sids:
+        srv.close_session(sid)
+    names = {r.name for r in t.spans()}
+    assert "retry" in names or "degrade" in names
+    attempts = [r for r in t.spans() if r.name == "launch_attempt"]
+    assert any(r.attrs.get("attempt", 0) > 0 or "error" in r.attrs
+               for r in attempts)
+
+
+def test_stream_decoder_emits_async_chunk_spans():
+    from repro.core import DecoderConfig, FrameSpec
+    from repro.core.stream import make_stream_decoder
+    t = Tracer()
+    spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    dec = make_stream_decoder(DecoderConfig(spec=spec), chunk_frames=4,
+                              trace=t)
+    rng = np.random.default_rng(0)
+    n = 3 * 4 * spec.f
+    out = np.concatenate([
+        dec.push(rng.standard_normal((n, 2)).astype(np.float32)),
+        dec.flush()])
+    assert out.size == n
+    chunks = [r for r in t.spans() if r.name == "chunk"]
+    assert len(chunks) == 3 and all(r.kind == "async" for r in chunks)
+    assert {r.name for r in t.spans()} >= {"push", "flush", "dispatch"}
+
+
+def test_plan_decode_span_carries_chosen_plan_and_vmem():
+    from repro.core import FrameSpec, STD_K7
+    from repro.kernels.autotune import plan_decode
+    t = Tracer()
+    set_tracer(t)
+    spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)
+    plan = plan_decode(STD_K7, spec, layout="auto")
+    (rec,) = [r for r in t.spans() if r.name == "plan_decode"]
+    a = rec.attrs
+    assert a["kernel"] == "unified"
+    assert a["frames_per_tile"] == plan.frames_per_tile
+    assert a["chunk_frames"] == plan.chunk_frames
+    assert a["vmem_bytes"] > 0 and a["vmem_budget"] > 0
+    assert a["fits"] is True
+    assert a["fingerprint"] == plan.fingerprint()
+
+
+def test_kernel_trace_event_fires_once_per_compile():
+    from repro.core import FrameSpec, STD_K7
+    from repro.core.framed import frame_llr
+    from repro.kernels import ops
+    t = Tracer()
+    set_tracer(t)
+    spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    rng = np.random.default_rng(0)
+    llr = jnp.asarray(rng.standard_normal((8 * spec.f, 2)).astype(np.float32))
+    frames = frame_llr(llr, spec)
+    for _ in range(3):                       # re-launches hit the jit cache
+        ops.viterbi_decode_frames(frames, STD_K7, spec,
+                                  frames_per_tile=8).block_until_ready()
+    evs = [r for r in t.spans() if r.name == "kernel_trace"]
+    assert len(evs) == 1                     # one real compile
+    assert evs[0].attrs["kernel"] == "unified"
+    assert evs[0].attrs["frames_per_tile"] == 8
+    assert t.counters()["kernel_traces"] == 1
+
+
+def test_plan_cache_counts_hits_misses_and_build_time():
+    from repro.core import DecoderConfig, FrameSpec
+    from repro.serve.plan_cache import PlanCache
+    t = Tracer()
+    set_tracer(t)
+    cache = PlanCache()
+    cfg = DecoderConfig(spec=FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20))
+    cache.frame_decoder(cfg)
+    cache.frame_decoder(cfg)
+    c = t.counters()
+    assert c["plan_cache_misses"] == 1 and c["plan_cache_hits"] == 1
+    assert any(r.name == "plan_build" for r in t.spans())
+    assert cache.stats()["build_ms"] >= 0.0
+
+
+def test_record_fault_rejects_unknown_counter():
+    from repro.serve.metrics import BucketMetrics
+    m = BucketMetrics("b0")
+    with pytest.raises(ValueError, match="unknown fault counter"):
+        m.record_fault("not_a_counter")
+    m.record_fault("retries", error="e1", n=2)
+    assert m.retries == 2 and m.last_error == "e1"
