@@ -23,13 +23,31 @@ __all__ = ["SCHEMA", "DEFAULT_PATH", "load_runs", "append_run", "best_mbps",
 
 
 def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
-    """Existing runs, oldest first ([] when the file is absent)."""
+    """Existing runs, oldest first ([] when the file is absent).
+
+    Degenerate-but-honest stores parse to [] instead of raising or
+    fabricating a junk run: an empty document (``{}``), a v2 envelope
+    with no runs yet, or a bare JSON list (a hand-edited/partial store —
+    its dict entries are kept). Only a STRUCTURALLY wrong file (v2
+    envelope whose ``runs`` is not a list) raises — silently dropping
+    real history would let a regression gate itself green."""
     if not os.path.exists(path):
         return []
     with open(path) as fh:
         data = json.load(fh)
+    if isinstance(data, list):
+        return [r for r in data if isinstance(r, dict)]
+    if not isinstance(data, dict) or not data:
+        return []
     if data.get("schema") == SCHEMA:
-        return data["runs"]
+        runs = data.get("runs", [])
+        if not isinstance(runs, list):
+            raise ValueError(
+                f"trajectory 'runs' is {type(runs).__name__}, expected a "
+                f"list of runs")
+        return runs
+    if "rows" not in data:
+        return []
     # v1: one run, {"schema": "kernel_sweep/v1", "full":..., "rows":[...]}
     return [{"full": data.get("full", False), "rows": data.get("rows", []),
              "schema_origin": data.get("schema", "v1")}]

@@ -22,9 +22,23 @@ writes a Chrome trace-event file — open it in https://ui.perfetto.dev to
 see the nested push/launch/retire spans (and, under ``--chaos``, the
 retry/degrade recovery sub-spans) on a timeline.
 
+Durability (PR 8):
+
+  ``--checkpoint-dir DIR`` snapshots the whole server to DIR/serve.ckpt
+  after every round (atomic, CRC-validated). ``--kill-at-step N``
+  injects a process 'death' at server step N and then demonstrates crash
+  recovery live: the client restores a FRESH server from the last
+  checkpoint, rewinds its own stream positions to the matching marker,
+  and replays — every session still verifies bit-identical at the end.
+  ``--resume`` restores server state (cumulative metrics/uptime, any
+  carried-over sessions) from DIR/serve.ckpt at startup instead of
+  building a fresh server.
+
 (For the unrelated LM continuous-batching demo, see examples/serve_lm.py.)
 """
 import argparse
+import os
+import tempfile
 
 import numpy as np
 import jax
@@ -58,10 +72,21 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chaos", action="store_true",
                     help="run under a seeded fault-injection schedule")
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="snapshot the server to DIR/serve.ckpt after "
+                         "every round")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the server from the checkpoint dir at "
+                         "startup (cumulative metrics carry over)")
+    ap.add_argument("--kill-at-step", type=int, default=0, metavar="N",
+                    help="inject a crash at server step N, then recover "
+                         "from the last checkpoint and replay")
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write a Chrome trace-event JSON of the run "
                          "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
+    if args.kill_at_step and not args.checkpoint_dir:
+        args.checkpoint_dir = tempfile.mkdtemp(prefix="serve_ckpt_")
 
     tracer = None
     if args.trace_out:
@@ -75,22 +100,38 @@ def main(argv=None):
             ("K7 r3/4", DecoderConfig(spec=spec34, rate="3/4")),
             ("K5 r1/2", DecoderConfig(trellis=k5, spec=spec12))]
 
-    faults = None
+    from repro.testing import FaultInjector, FaultSpec
+    from repro.testing.faults import InjectedCrash
+    specs = []
     if args.chaos:
-        from repro.testing import FaultInjector, FaultSpec
         # the LAST session is the poisoned tenant (sids count from 0)
-        faults = FaultInjector(
-            FaultSpec("launch_error", every=5),
-            FaultSpec("launch_slow", every=7, delay_s=0.05),
-            FaultSpec("plan_cache_miss", every=6),
-            FaultSpec("corrupt_llr", every=2, mode="nan",
-                      sessions=(args.sessions - 1,)),
-            seed=3)
+        specs += [FaultSpec("launch_error", every=5),
+                  FaultSpec("launch_slow", every=7, delay_s=0.05),
+                  FaultSpec("plan_cache_miss", every=6),
+                  FaultSpec("corrupt_llr", every=2, mode="nan",
+                            sessions=(args.sessions - 1,))]
+    if args.kill_at_step:
+        specs.append(FaultSpec("crash_at_step", after=args.kill_at_step,
+                               count=1))
+    faults = FaultInjector(*specs, seed=3) if specs else None
     cache = PlanCache()
-    srv = DecodeServer(slots=args.slots, max_sessions=args.sessions,
-                       queue_depth=4, cache=cache, faults=faults,
-                       launch_timeout_s=0.03 if args.chaos else None,
-                       max_retries=1, backoff_s=0.0, quarantine_after=2)
+    ck_path = (os.path.join(args.checkpoint_dir, "serve.ckpt")
+               if args.checkpoint_dir else None)
+    if args.resume and ck_path and os.path.exists(ck_path):
+        srv = DecodeServer.restore(ck_path, cache=cache, faults=faults)
+        for sid in list(srv._sessions):
+            tail = srv.close_session(sid)
+            print(f"resumed: closed carried-over session {sid} "
+                  f"({len(tail)} undelivered bits recovered)")
+        print(f"resumed from {ck_path}: cumulative uptime "
+              f"{srv.metrics_snapshot()['totals']['uptime_s']:.2f}s, "
+              f"restore #{srv.checkpoint_restores}")
+    else:
+        srv = DecodeServer(slots=args.slots, max_sessions=args.sessions,
+                           queue_depth=4, cache=cache, faults=faults,
+                           launch_timeout_s=0.03 if args.chaos else None,
+                           max_retries=1, backoff_s=0.0,
+                           quarantine_after=2)
     tenants = []
     for i in range(args.sessions):
         name, cfg = cfgs[i % len(cfgs)]
@@ -106,25 +147,52 @@ def main(argv=None):
           f"chunk={args.chunk_frames} frames, slots={args.slots}"
           + (", CHAOS schedule on" if args.chaos else ""))
 
-    for r in range(args.chunks):
-        for t in tenants:
-            if t["quarantined"] is not None:
-                continue
-            try:
-                srv.push(t["sid"], t["chunks"][r])
-            except Backpressure:
-                srv.step()
-                srv.push(t["sid"], t["chunks"][r])
-            except SessionQuarantined as e:
-                t["quarantined"] = e
-        while srv.step():
-            pass
-        for t in tenants:
-            if t["quarantined"] is None:
+    # client-side recovery marker: (next round, bits delivered per tenant,
+    # quarantine states) as of the last checkpoint — on a crash the client
+    # rewinds to it and replays against the restored server
+    mark = None
+    if ck_path:
+        srv.checkpoint(ck_path)
+        mark = (0, [0] * len(tenants), [None] * len(tenants))
+    r = 0
+    while r < args.chunks:
+        try:
+            for t in tenants:
+                if t["quarantined"] is not None:
+                    continue
                 try:
-                    t["out"].append(srv.poll(t["sid"]))
+                    srv.push(t["sid"], t["chunks"][r])
+                except Backpressure as e:
+                    # the structured hint says how many steps clear it
+                    for _ in range(e.retry_after_steps or 1):
+                        srv.step()
+                    srv.push(t["sid"], t["chunks"][r])
                 except SessionQuarantined as e:
                     t["quarantined"] = e
+            while srv.step():
+                pass
+            for t in tenants:
+                if t["quarantined"] is None:
+                    try:
+                        t["out"].append(srv.poll(t["sid"]))
+                    except SessionQuarantined as e:
+                        t["quarantined"] = e
+            r += 1
+            if ck_path:
+                srv.checkpoint(ck_path)
+                mark = (r, [sum(len(o) for o in t["out"]) for t in tenants],
+                        [t["quarantined"] for t in tenants])
+        except InjectedCrash as e:
+            print(f"\nCRASH: {e} — restoring a fresh server from {ck_path}")
+            srv = DecodeServer.restore(ck_path, cache=cache, faults=faults)
+            r, delivered, quar = mark
+            for t, nb, q in zip(tenants, delivered, quar):
+                acc = (np.concatenate(t["out"]) if t["out"]
+                       else np.zeros(0, np.int32))
+                t["out"] = [acc[:nb]]
+                t["quarantined"] = q
+            print(f"restored (restore #{srv.checkpoint_restores}); "
+                  f"replaying from round {r}")
     for t in tenants:
         t["out"].append(srv.close_session(t["sid"]))  # quarantined too
 
@@ -166,6 +234,9 @@ def main(argv=None):
         print(f"{stage:<16}{s['count']:>7}{s['p50']:>8.2f}{s['p99']:>8.2f}"
               f"{s['max']:>8.2f}")
     print("plan cache:", snap["plan_cache"])
+    if ck_path:
+        print(f"checkpoints: {snap['checkpoint']['saves']} saved, "
+              f"{snap['checkpoint']['restores']} restores -> {ck_path}")
     if args.chaos:
         print(f"faults recovered: {tot['launch_errors']} launch errors, "
               f"{tot['timeouts']} timeouts, {tot['retries']} retries, "

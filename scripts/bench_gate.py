@@ -48,7 +48,7 @@ def _load_prior(path: str) -> list[dict]:
         return []
     try:
         runs = load_runs(path)
-    except (OSError, ValueError, KeyError, TypeError) as e:
+    except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
         raise GateError(
             f"trajectory file {path} exists but cannot be read "
             f"({e.__class__.__name__}: {e}); fix or delete it, or point "
@@ -56,6 +56,12 @@ def _load_prior(path: str) -> list[dict]:
     if not isinstance(runs, list):
         raise GateError(f"trajectory file {path} parsed to "
                         f"{type(runs).__name__}, expected a list of runs")
+    if not runs:
+        # a present-but-empty store (fresh {}, empty v2 envelope, bare
+        # []) is a first run, same as a missing file — no baseline to
+        # gate against, this run records one
+        print(f"bench gate: trajectory at {path} holds no prior runs — "
+              f"no baseline, recording only")
     return runs
 
 

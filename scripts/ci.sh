@@ -204,6 +204,103 @@ print(f"chaos smoke: {tot['launch_errors']} launch errors, "
 print("CHAOS_SMOKE_OK")
 EOF
 
+# ---- crash-recovery chaos stage: a seeded crash_at_step kills the
+# server mid-workload; a FRESH server restores from the last checkpoint
+# and the client replays from its marker. Gates: (a) every session's
+# final bits are bit-identical to the uninterrupted solo decode, (b) the
+# restored metrics_snapshot() preserves the fault counters and the
+# uptime accounting accumulated before the crash, (c) a checkpoint
+# corrupted in flight is REJECTED with a structured error — the previous
+# good checkpoint (atomic replace) still loads.
+python - <<'EOF'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import DecoderConfig, FrameSpec, encode
+from repro.core.stream import stream_decode
+from repro.channel.sim import awgn, bpsk
+from repro.serve import CheckpointError, DecodeServer, PlanCache
+from repro.testing import FaultInjector, FaultSpec
+from repro.testing.faults import InjectedCrash
+
+spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+cfg = DecoderConfig(spec=spec)
+rng = np.random.default_rng(7)
+
+def rx_for(n, seed):
+    bits = jnp.asarray(rng.integers(0, 2, n))
+    tx = bpsk(encode(bits, cfg.trellis).reshape(-1))
+    return np.asarray(awgn(jax.random.PRNGKey(seed), tx, 4.0)).reshape(n, 2)
+
+n = 16 * 64
+rx = {k: rx_for(n, k) for k in range(3)}
+CK = "/tmp/ci_serve.ckpt"
+faults = FaultInjector(FaultSpec("launch_error", every=4),
+                       FaultSpec("crash_at_step", after=3, count=1), seed=5)
+srv = DecodeServer(slots=4, cache=PlanCache(), max_retries=2,
+                   backoff_s=0.0, faults=faults)
+sids = {k: srv.open_session(cfg, chunk_frames=2) for k in rx}
+pos = {k: 0 for k in rx}
+bits = {k: [] for k in rx}
+srv.checkpoint(CK)
+mark = ({k: 0 for k in rx}, dict(pos))
+pre_crash = None
+crashes = 0
+while any(p < n for p in pos.values()):
+    try:
+        for k, sid in sids.items():
+            if pos[k] < n:
+                srv.push(sid, rx[k][pos[k]:pos[k] + 2 * 64])
+                pos[k] += 2 * 64
+        srv.step()
+        for k, sid in sids.items():
+            bits[k].append(srv.poll(sid))
+        srv.checkpoint(CK)
+        pre_crash = srv.metrics_snapshot()   # after the save: counters
+        mark = ({k: sum(len(b) for b in bits[k]) for k in rx}, dict(pos))
+    except InjectedCrash:
+        crashes += 1
+        srv = DecodeServer.restore(CK, cache=PlanCache())
+        post = srv.metrics_snapshot()
+        for c in ("launch_errors", "retries", "launches", "bits"):
+            assert post["totals"][c] == pre_crash["totals"][c], c
+        # restored uptime resumes from the SAVED clock, which trails the
+        # snapshot above by the wall time of one statement — allow 10 ms
+        assert post["totals"]["uptime_s"] > 0.0
+        assert post["totals"]["uptime_s"] >= \
+            pre_crash["totals"]["uptime_s"] - 0.01
+        assert post["checkpoint"]["restores"] == 1, post["checkpoint"]
+        delivered, posmark = mark
+        for k in rx:
+            acc = (np.concatenate(bits[k]) if bits[k]
+                   else np.zeros(0, np.int32))
+            bits[k] = [acc[:delivered[k]]]
+        pos = dict(posmark)
+assert crashes == 1, "the seeded crash never fired"
+for k, sid in sids.items():
+    bits[k].append(srv.close_session(sid))
+for k in rx:
+    got = np.concatenate(bits[k])[:n]
+    want = stream_decode(cfg, rx[k], n, chunk_frames=2)
+    assert np.array_equal(got, want), \
+        f"session {k}: NOT bit-identical after crash+restore"
+
+# torn checkpoint: a file corrupted in flight must be refused outright
+faults2 = FaultInjector(FaultSpec("checkpoint_corrupt", after=1), seed=0)
+srv2 = DecodeServer(cache=PlanCache(), faults=faults2)
+srv2.open_session(cfg, chunk_frames=2)
+srv2.checkpoint("/tmp/ci_serve_torn.ckpt")
+try:
+    DecodeServer.restore("/tmp/ci_serve_torn.ckpt")
+    raise AssertionError("corrupt checkpoint was accepted")
+except CheckpointError:
+    pass
+assert DecodeServer.restore(CK, cache=PlanCache()).num_sessions == 3
+print(f"crash-recovery smoke: crash at step 3 recovered from {CK}; "
+      f"3 sessions bit-identical, counters+uptime preserved across the "
+      f"restore, torn checkpoint refused")
+print("CRASH_RECOVERY_OK")
+EOF
+
 # ---- obs smoke: the chaos workload again, traced end to end. The demo
 # must emit a Chrome trace-event file that (a) parses, (b) contains the
 # nested push/launch/launch_attempt/retire spans plus the retry/degrade

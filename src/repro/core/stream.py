@@ -46,8 +46,10 @@ configuration — tenant churn — never re-traces.
 """
 from __future__ import annotations
 
+import base64
 import collections
 import dataclasses
+import zlib
 
 import numpy as np
 import jax.numpy as jnp
@@ -57,7 +59,25 @@ from .puncture import PATTERNS
 from .sanitize import LLR_CLIP, sanitize_llr
 
 __all__ = ["StreamContext", "StreamDecoder", "Window", "make_stream_decoder",
-           "stream_decode"]
+           "stream_decode", "STATE_VERSIONS"]
+
+#: ``StreamContext.state_dict`` schema versions this build can write AND
+#: read back. v1 stores the carry arrays as plain JSON lists (readable,
+#: large); v2 stores them as base64 little-endian float32 bytes with a
+#: CRC over the binary payload. Both round-trip bit-exactly.
+STATE_VERSIONS = (1, 2)
+
+
+def _enc_f32(arr: np.ndarray) -> str:
+    """float32 array -> base64 of its little-endian bytes (bit-exact)."""
+    return base64.b64encode(
+        np.ascontiguousarray(arr, dtype="<f4").tobytes()).decode("ascii")
+
+
+def _dec_f32(data: str, shape: tuple) -> np.ndarray:
+    raw = base64.b64decode(data.encode("ascii"), validate=True)
+    arr = np.frombuffer(raw, dtype="<f4").astype(np.float32)
+    return arr.reshape(shape)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +163,99 @@ class StreamContext:
         """Cumulative numeric-hardening counters for this stream."""
         return {"stages_in": self.n_in, "bits_out": self.n_out,
                 "sanitized_values": self.n_sanitized}
+
+    # -- durable sessions: versioned carry-state serialization -------------
+    def _geometry(self) -> dict:
+        """The identity a saved state must match to be loadable: a state
+        restored into a context of different frame geometry would decode
+        different bits, so the mismatch is an error, never a best-effort
+        load."""
+        return {"f": self.spec.f, "v1": self.spec.v1, "v2": self.spec.v2,
+                "beta": self.beta, "chunk_frames": self.chunk_frames,
+                "rate": self.rate}
+
+    def state_dict(self, version: int = 2) -> dict:
+        """The session's complete carry state, JSON-ready and versioned.
+
+        This is everything a fresh process needs to resume the stream
+        BIT-IDENTICALLY: the rolling v1/v2 overlap buffer, the pending
+        raw punctured tail, the stream-global depuncture phase, and the
+        pushed/emitted/sanitized counters. The truncated-traceback
+        insight (arXiv 1608.00066) is why this works and why it is
+        small: frame m's decode depends only on the window
+        ``[m*f - v1, (m+1)*f + v2)``, so a bounded carry window is all
+        the state a session ever needs — ``load_state`` + replaying the
+        not-yet-pushed input reproduces the uninterrupted stream's
+        output exactly (tests/test_checkpoint.py gates the bit
+        identity)."""
+        if version not in STATE_VERSIONS:
+            raise ValueError(f"unknown StreamContext state version "
+                             f"{version}; this build writes {STATE_VERSIONS}")
+        state = {"version": version, "geometry": self._geometry(),
+                 "phase": int(self._phase), "n_in": int(self.n_in),
+                 "n_out": int(self.n_out),
+                 "n_sanitized": int(self.n_sanitized),
+                 "buf_rows": int(self._buf.shape[0]),
+                 "raw_len": int(self._raw.shape[0])}
+        if version == 1:
+            state["buf"] = [float(x) for x in self._buf.reshape(-1)]
+            state["raw"] = [float(x) for x in self._raw]
+        else:
+            buf_b64 = _enc_f32(self._buf)
+            raw_b64 = _enc_f32(self._raw)
+            state["buf"] = buf_b64
+            state["raw"] = raw_b64
+            state["crc"] = zlib.crc32(
+                (buf_b64 + "|" + raw_b64).encode("ascii"))
+        return state
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict`` into this context (which must have
+        the same geometry). Validates version, geometry, and — for v2
+        states — the carry CRC before touching any field, so a corrupt
+        or mismatched state never half-loads."""
+        try:
+            version = state["version"]
+            geometry = state["geometry"]
+        except (TypeError, KeyError) as e:
+            raise ValueError(
+                f"not a StreamContext state dict (missing {e})") from None
+        if version not in STATE_VERSIONS:
+            raise ValueError(
+                f"unsupported StreamContext state version {version!r}; "
+                f"this build reads {STATE_VERSIONS}")
+        if geometry != self._geometry():
+            raise ValueError(
+                f"state geometry {geometry} does not match this context's "
+                f"{self._geometry()}; restoring it would decode different "
+                f"bits")
+        buf_rows, raw_len = int(state["buf_rows"]), int(state["raw_len"])
+        if version == 1:
+            buf = np.asarray(state["buf"], np.float32).reshape(
+                buf_rows, self.beta)
+            raw = np.asarray(state["raw"], np.float32).reshape(raw_len)
+        else:
+            crc = zlib.crc32(
+                (state["buf"] + "|" + state["raw"]).encode("ascii"))
+            if crc != state.get("crc"):
+                raise ValueError(
+                    f"StreamContext state CRC mismatch (stored "
+                    f"{state.get('crc')}, computed {crc}): the carry "
+                    f"buffers are corrupt")
+            try:
+                buf = _dec_f32(state["buf"], (buf_rows, self.beta))
+                raw = _dec_f32(state["raw"], (raw_len,))
+            except ValueError as e:
+                raise ValueError(
+                    f"StreamContext carry buffers undecodable: {e}") \
+                    from None
+        # all fields validated — commit atomically
+        self._buf = buf
+        self._raw = raw
+        self._phase = int(state["phase"])
+        self.n_in = int(state["n_in"])
+        self.n_out = int(state["n_out"])
+        self.n_sanitized = int(state["n_sanitized"])
 
     # -- depuncturing (stream-global phase) -------------------------------
     def _stage_counts(self, t_max: int) -> np.ndarray:

@@ -125,3 +125,30 @@ class Histogram:
                 "p50": round(self.percentile(50), 4),
                 "p99": round(self.percentile(99), 4),
                 "max": round(self.vmax, 4) if self.count else 0.0}
+
+    def state_dict(self) -> dict:
+        """Full JSON-ready state (counts included), for the serve
+        checkpoint: a restored histogram keeps reporting the same
+        percentiles the pre-crash server did. ``vmin``/``vmax`` are None
+        while empty (JSON has no +-inf)."""
+        return {"counts": list(self.counts), "count": self.count,
+                "total": self.total,
+                "vmin": self.vmin if self.count else None,
+                "vmax": self.vmax if self.count else None}
+
+    def load_state(self, state: dict) -> "Histogram":
+        """Restore a ``state_dict`` into this histogram (whose bounds
+        must have the same bucket count); returns self."""
+        counts = list(state["counts"])
+        if len(counts) != len(self.counts):
+            raise ValueError(
+                f"histogram state has {len(counts)} buckets, this "
+                f"histogram has {len(self.counts)}")
+        self.counts = [int(c) for c in counts]
+        self.count = int(state["count"])
+        self.total = float(state["total"])
+        self.vmin = float("inf") if state["vmin"] is None \
+            else float(state["vmin"])
+        self.vmax = float("-inf") if state["vmax"] is None \
+            else float(state["vmax"])
+        return self

@@ -10,12 +10,16 @@ service.)
 """
 from .plan_cache import PLAN_CACHE, PlanCache          # noqa: F401
 from .metrics import BucketMetrics, ServeMetrics, FAULT_COUNTERS  # noqa: F401
-from .scheduler import Bucket, Session, bucket_plan    # noqa: F401
-from .server import (Backpressure, DecodeServer, LaunchTimeout,  # noqa: F401
-                     PoisonedInput, ServeError, ServerFull,
+from .scheduler import Breaker, Bucket, Session, bucket_plan    # noqa: F401
+from .server import (Backpressure, DecodeServer, Draining,  # noqa: F401
+                     LaunchTimeout, PoisonedInput, ServeError, ServerFull,
                      SessionQuarantined)
+from .checkpoint import (CheckpointError, load_checkpoint,  # noqa: F401
+                         save_checkpoint)
 
 __all__ = ["DecodeServer", "ServeError", "ServerFull", "Backpressure",
            "PoisonedInput", "SessionQuarantined", "LaunchTimeout",
-           "PlanCache", "PLAN_CACHE", "ServeMetrics", "BucketMetrics",
-           "FAULT_COUNTERS", "Bucket", "Session", "bucket_plan"]
+           "Draining", "CheckpointError", "save_checkpoint",
+           "load_checkpoint", "PlanCache", "PLAN_CACHE", "ServeMetrics",
+           "BucketMetrics", "FAULT_COUNTERS", "Breaker", "Bucket",
+           "Session", "bucket_plan"]

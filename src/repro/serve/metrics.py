@@ -51,9 +51,13 @@ __all__ = ["BucketMetrics", "ServeMetrics", "percentile", "FAULT_COUNTERS",
 
 #: Counter fields summed into ``ServeMetrics.totals()`` and carried in
 #: every snapshot row (the robustness-observability contract).
+#: ``breaker_trips`` counts circuit-breaker open transitions (consecutive
+#: launch failures exceeded the threshold — the device-failure signal);
+#: ``evacuated`` counts sessions moved off a tripped bucket to its
+#: failover bucket (pinned to the reference backend / healthy device).
 FAULT_COUNTERS = ("launch_errors", "timeouts", "retries", "degraded",
                   "cache_refreshes", "poisoned_pushes", "sanitized_values",
-                  "quarantined")
+                  "quarantined", "breaker_trips", "evacuated")
 
 #: Pipeline stages with a server-wide latency histogram (all in ms; the
 #: tracing spans of the same names carry the per-occurrence detail).
@@ -87,6 +91,8 @@ class BucketMetrics:
     poisoned_pushes: int = 0          # pushes failing input validation
     sanitized_values: int = 0         # LLR values scrubbed/clamped
     quarantined: int = 0              # sessions quarantined (cumulative)
+    breaker_trips: int = 0            # circuit-breaker open transitions
+    evacuated: int = 0                # sessions evacuated off this bucket
     last_error: str = ""              # most recent fault, human-readable
     latency: Histogram = dataclasses.field(
         default_factory=Histogram.latency_ms)
@@ -134,8 +140,10 @@ class BucketMetrics:
     @property
     def health(self) -> str:
         """'ok' | 'impaired' (faults seen, all recovered on the fast
-        path) | 'degraded' (reference fallback was needed)."""
-        if self.degraded:
+        path) | 'degraded' (reference fallback was needed, or the
+        bucket's circuit breaker tripped and its sessions were
+        evacuated)."""
+        if self.degraded or self.breaker_trips:
             return "degraded"
         if (self.launch_errors or self.timeouts or self.retries
                 or self.poisoned_pushes or self.quarantined):
@@ -164,6 +172,30 @@ class BucketMetrics:
             row["last_error"] = self.last_error
         return row
 
+    #: Plain counter fields round-tripped by the serve checkpoint.
+    _STATE_FIELDS = ("launches", "windows", "frames", "pad_frames",
+                     "bits") + FAULT_COUNTERS
+
+    def state_dict(self) -> dict:
+        """JSON-ready full state for the serve checkpoint — counters,
+        the latency histogram, and the uptime accumulated so far (the
+        monotonic epoch itself cannot cross processes)."""
+        state = {f: getattr(self, f) for f in self._STATE_FIELDS}
+        state["last_error"] = self.last_error
+        state["uptime_s"] = self.uptime_s
+        state["latency"] = self.latency.state_dict()
+        return state
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict``; uptime continues from the saved
+        value (a restored server reports cumulative uptime, not a fresh
+        epoch — the crash-recovery CI stage gates this)."""
+        for f in self._STATE_FIELDS:
+            setattr(self, f, int(state[f]))
+        self.last_error = str(state["last_error"])
+        self.t0 = time.perf_counter() - float(state["uptime_s"])
+        self.latency.load_state(state["latency"])
+
 
 class ServeMetrics:
     """All buckets of one DecodeServer, plus the server-wide stage
@@ -190,6 +222,26 @@ class ServeMetrics:
     def stage_snapshot(self) -> dict:
         """{stage: summary} — the stage-latency breakdown rows."""
         return {name: h.snapshot() for name, h in self._stages.items()}
+
+    def state_dict(self) -> dict:
+        """Everything the serve checkpoint persists about metrics: every
+        bucket's counters/latency, the stage histograms, and the
+        server-wide uptime."""
+        return {"uptime_s": time.perf_counter() - self.t0,
+                "buckets": {bid: m.state_dict()
+                            for bid, m in self._buckets.items()},
+                "stages": {name: h.state_dict()
+                           for name, h in self._stages.items()}}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict`` — fault counters and uptime carry
+        across the restore, so ``metrics_snapshot()`` tells one
+        continuous story over the crash boundary."""
+        self.t0 = time.perf_counter() - float(state["uptime_s"])
+        for bid, mstate in state["buckets"].items():
+            self.bucket(bid).load_state(mstate)
+        for name, hstate in state["stages"].items():
+            self.stage(name).load_state(hstate)
 
     def __iter__(self):
         return iter(self._buckets.values())

@@ -32,7 +32,87 @@ from ..core.pipeline import DecoderConfig
 from ..core.stream import StreamContext, Window
 from ..kernels.autotune import DecodePlan, plan_decode
 
-__all__ = ["PendingWindow", "Session", "Bucket", "bucket_plan"]
+__all__ = ["PendingWindow", "Session", "Bucket", "Breaker", "bucket_plan"]
+
+
+class Breaker:
+    """Per-bucket circuit breaker over the batched-launch path.
+
+    Classic three-state machine, counted in consecutive launch-attempt
+    failures (each retry attempt that raises or times out is one
+    failure; any fast-path success resets the streak):
+
+      * ``closed``    — normal; ``threshold`` consecutive failures trip
+        it OPEN (the device-failure signal: retries are not clearing the
+        fault).
+      * ``open``      — the fast path is not attempted at all; the
+        server evacuates the bucket's sessions to its failover bucket
+        (pinned to the reference backend on a healthy device). After
+        ``cooldown`` server steps the breaker goes HALF-OPEN.
+      * ``half_open`` — the next batch is used as a probe on the
+        original fast path: success closes the breaker (sessions move
+        back), failure re-opens it (a fresh trip, a fresh cooldown).
+
+    Every open transition is a *trip*, counted here and in the bucket's
+    ``breaker_trips`` fault counter / health.
+    """
+
+    def __init__(self, threshold: int = 5, cooldown: int = 4):
+        assert threshold > 0 and cooldown > 0
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.state = "closed"
+        self.consecutive = 0          # failures since the last success
+        self.trips = 0                # open transitions, cumulative
+        self._wait = 0                # steps left in the open cooldown
+
+    def record_failure(self) -> bool:
+        """One failed launch attempt; returns True when THIS failure
+        trips the breaker open (closed -> open, or a failed half-open
+        probe re-opening)."""
+        self.consecutive += 1
+        if self.state == "half_open" or (
+                self.state == "closed"
+                and self.consecutive >= self.threshold):
+            self.state = "open"
+            self._wait = self.cooldown
+            self.trips += 1
+            return True
+        return False
+
+    def record_success(self) -> bool:
+        """One successful fast-path launch; returns True when it closes
+        a half-open breaker (the probe succeeded — the device is back)."""
+        self.consecutive = 0
+        if self.state == "half_open":
+            self.state = "closed"
+            return True
+        return False
+
+    def step(self) -> None:
+        """One server step elapsed; an open breaker counts down to its
+        half-open probe."""
+        if self.state == "open":
+            self._wait -= 1
+            if self._wait <= 0:
+                self.state = "half_open"
+
+    def state_dict(self) -> dict:
+        return {"state": self.state, "consecutive": self.consecutive,
+                "trips": self.trips, "wait": self._wait}
+
+    def load_state(self, state: dict) -> None:
+        if state["state"] not in ("closed", "open", "half_open"):
+            raise ValueError(f"unknown breaker state {state['state']!r}")
+        self.state = state["state"]
+        self.consecutive = int(state["consecutive"])
+        self.trips = int(state["trips"])
+        self._wait = int(state["wait"])
+
+    def snapshot(self) -> dict:
+        """JSON-ready row for ``metrics_snapshot()['breakers']``."""
+        return {"state": self.state, "trips": self.trips,
+                "consecutive": self.consecutive}
 
 
 def bucket_plan(cfg: DecoderConfig, num_devices: int = 1,
@@ -78,6 +158,7 @@ class Session:
     closed: bool = False
     strikes: int = 0              # validation failures so far
     quarantined: str | None = None  # reason, once quarantined
+    chunk_frames_arg: int | None = None  # open_session arg, for restore
 
     def _enqueue(self, w: Window) -> None:
         assert w.nframes == self.bucket.chunk_frames    # one bucket geometry
@@ -112,9 +193,21 @@ class Session:
 
 
 class Bucket:
-    """Live sessions sharing one compiled plan — and one launch per step."""
+    """Live sessions sharing one compiled plan — and one launch per step.
 
-    def __init__(self, key, cfg: DecoderConfig, plan: DecodePlan):
+    ``mesh`` is the bucket's device placement (the server's mesh for
+    primary buckets; None for a failover bucket — device loss means the
+    evacuation target is the host/reference path). ``pinned`` marks a
+    failover bucket: its launches are pinned to the reference backend,
+    never consult the fault injector (the evacuation target is the path
+    that must work when the fast path doesn't — same contract as
+    ``_ref_fallback``), and ``primary`` points back at the bucket whose
+    breaker evacuation created it (half-open probes re-dispatch on the
+    primary's fast path)."""
+
+    def __init__(self, key, cfg: DecoderConfig, plan: DecodePlan, *,
+                 mesh=None, pinned: bool = False, primary=None,
+                 breaker: Breaker | None = None):
         self.key = key
         self.plan = plan
         self.chunk_frames = plan.chunk_frames
@@ -124,8 +217,13 @@ class Bucket:
         self.sessions: set[int] = set()
         self.queue: collections.deque[PendingWindow] = collections.deque()
         self.inflight: collections.deque = collections.deque()  # launches
+        self.mesh = mesh
+        self.pinned = pinned
+        self.primary: "Bucket | None" = primary
+        self.breaker = breaker if breaker is not None else Breaker()
         self.id = (f"K{cfg.trellis.k}-f{cfg.spec.f}-"
-                   f"C{self.chunk_frames}-{plan.fingerprint()}")
+                   f"C{self.chunk_frames}-{plan.fingerprint()}"
+                   + ("-failover" if pinned else ""))
 
     def tile_pad(self, batch_frames: int) -> int:
         """Frames of tile padding a launch of ``batch_frames`` pays: the

@@ -66,6 +66,31 @@ dispatched computation, so the deadline is checked around the dispatch
 With ``mesh=...`` every bucket's batch is sharded across the mesh's
 devices (distributed/stream.py) — the batch is the frame axis, so the
 scale-out story of the single stream carries over unchanged.
+
+Durability (PR 8 — the service survives bad *processes* and bad
+*devices*, not just bad inputs and bad launches):
+
+  * checkpoint/restore — ``checkpoint(path)`` writes an atomic
+    (tmp+rename), CRC-validated, schema-versioned snapshot of the whole
+    server: every session's bounded carry state
+    (``StreamContext.state_dict()``), undelivered decoded bits, queued
+    windows, quarantine strikes, circuit-breaker states, and the full
+    fault/metric counters. ``DecodeServer.restore(path)`` rebuilds an
+    equivalent server in a fresh process; every restored stream resumes
+    BIT-IDENTICALLY (serve/checkpoint.py; corrupt or version-mismatched
+    files raise ``CheckpointError`` — never a half-loaded server).
+  * drain — ``drain(checkpoint=path)`` stops admitting (``Draining`` on
+    ``open_session``/``push``), retires every in-flight launch, and
+    snapshots: the operational stop-the-world handoff (drain -> snapshot
+    -> restart elsewhere).
+  * circuit breakers + failover — ``threshold`` consecutive launch
+    failures on a bucket trip its breaker OPEN (the device-failure
+    signal): its sessions and queued windows are EVACUATED to a failover
+    bucket pinned to the reference backend on the host (``mesh=None`` —
+    the healthy device), counted in ``breaker_trips``/``evacuated`` and
+    visible in ``metrics_snapshot()['breakers']`` and health. After a
+    cooldown the breaker half-opens and the next batch probes the
+    original fast path; success closes it and moves the sessions back.
 """
 from __future__ import annotations
 
@@ -81,10 +106,11 @@ from ..core.stream import StreamContext
 from ..obs.tracer import get_tracer
 from .metrics import ServeMetrics
 from .plan_cache import PLAN_CACHE, PlanCache
-from .scheduler import Bucket, Session, bucket_plan
+from .scheduler import Breaker, Bucket, Session, bucket_plan
 
 __all__ = ["DecodeServer", "ServeError", "ServerFull", "Backpressure",
-           "PoisonedInput", "SessionQuarantined", "LaunchTimeout"]
+           "PoisonedInput", "SessionQuarantined", "LaunchTimeout",
+           "Draining"]
 
 
 class ServeError(RuntimeError):
@@ -142,6 +168,19 @@ class LaunchTimeout(ServeError):
     signal; surfaces only in bucket metrics/last_error)."""
 
 
+class Draining(ServeError):
+    """The server is draining toward a snapshot/handoff: admission and
+    pushes are refused (``retry_after_steps`` is None — retry against
+    the RESTORED server, not this one); ``step``/``poll``/
+    ``close_session`` keep working so in-flight work retires cleanly."""
+
+    def __init__(self, what: str):
+        super().__init__(
+            f"server is draining; {what} refused — finish the snapshot "
+            f"and retry against the restored server",
+            retry_after_steps=None)
+
+
 class DecodeServer:
     """Slot-based batching decode service over heterogeneous sessions.
 
@@ -182,11 +221,14 @@ class DecodeServer:
                  launch_timeout_s: float | None = None,
                  max_retries: int = 2, backoff_s: float = 0.01,
                  sanitize: str = "zero", llr_clip: float = LLR_CLIP,
-                 quarantine_after: int = 3, faults=None, trace=None):
+                 quarantine_after: int = 3,
+                 breaker_threshold: int = 5, breaker_cooldown: int = 4,
+                 faults=None, trace=None):
         assert slots > 0 and max_sessions > 0 and queue_depth > 0
         assert depth >= 0
         assert max_retries >= 0 and backoff_s >= 0.0
         assert quarantine_after > 0
+        assert breaker_threshold > 0 and breaker_cooldown > 0
         assert sanitize in ("zero", "raise", "off")
         self.slots = slots
         self.max_sessions = max_sessions
@@ -200,12 +242,32 @@ class DecodeServer:
         self.sanitize = sanitize
         self.llr_clip = llr_clip
         self.quarantine_after = quarantine_after
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = breaker_cooldown
         self.faults = faults
         self.trace = trace if trace is not None else get_tracer()
         self.metrics = ServeMetrics()
         self._sessions: dict[int, Session] = {}
         self._buckets: dict[tuple, Bucket] = {}
         self._next_sid = 0
+        self._draining = False
+        self.checkpoint_saves = 0
+        self.checkpoint_restores = 0
+
+    def init_kwargs(self) -> dict:
+        """The JSON-serializable constructor knobs — what the checkpoint
+        persists so ``restore`` rebuilds an equivalently configured
+        server (mesh/cache/faults/trace are process-local and passed
+        fresh at restore time)."""
+        return {"slots": self.slots, "max_sessions": self.max_sessions,
+                "queue_depth": self.queue_depth, "depth": self.depth,
+                "launch_timeout_s": self.launch_timeout_s,
+                "max_retries": self.max_retries,
+                "backoff_s": self.backoff_s, "sanitize": self.sanitize,
+                "llr_clip": float(self.llr_clip),
+                "quarantine_after": self.quarantine_after,
+                "breaker_threshold": self.breaker_threshold,
+                "breaker_cooldown": self.breaker_cooldown}
 
     # -- admission --------------------------------------------------------
     @property
@@ -215,25 +277,63 @@ class DecodeServer:
     def open_session(self, cfg: DecoderConfig,
                      chunk_frames: int | None = None) -> int:
         """Admit one tenant; returns its session id. Sessions of the same
-        (trellis, spec, plan) — any puncture rate — share a bucket."""
+        (trellis, spec, plan) — any puncture rate — share a bucket. A
+        bucket whose circuit breaker is not closed admits new sessions
+        straight onto its failover bucket (no tenant is placed on a
+        known-bad device); a draining server refuses admission."""
+        if self._draining:
+            raise Draining("open_session")
         if len(self._sessions) >= self.max_sessions:
             raise ServerFull(
                 f"{len(self._sessions)} live sessions (max_sessions="
                 f"{self.max_sessions}); close one or raise the limit")
+        return self._admit(cfg, chunk_frames)
+
+    def _bucket_for(self, cfg: DecoderConfig,
+                    chunk_frames: int | None) -> Bucket:
         ndev = int(self.mesh.devices.size) if self.mesh is not None else 1
         plan = bucket_plan(cfg, num_devices=ndev, chunk_frames=chunk_frames)
         key = (cfg.trellis, cfg.spec, plan.cache_key(), cfg.backend,
                cfg.interpret, self.mesh)
         bucket = self._buckets.get(key)
         if bucket is None:
-            bucket = self._buckets[key] = Bucket(key, cfg, plan)
-        sid = self._next_sid
-        self._next_sid += 1
+            bucket = self._buckets[key] = Bucket(
+                key, cfg, plan, mesh=self.mesh,
+                breaker=Breaker(self.breaker_threshold,
+                                self.breaker_cooldown))
+        return bucket
+
+    def _failover_bucket(self, primary: Bucket) -> Bucket:
+        """The evacuation target for ``primary``: same trellis/spec/plan
+        geometry (windows stay launch-compatible), pinned to the
+        reference backend on the host (``mesh=None`` — device loss means
+        the mesh is the thing we do not trust)."""
+        key = primary.key + ("failover",)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            cfg = dataclasses.replace(primary.decode_cfg,
+                                      backend="reference", renorm_every=1)
+            bucket = self._buckets[key] = Bucket(
+                key, cfg, primary.plan, mesh=None, pinned=True,
+                primary=primary)
+        return bucket
+
+    def _admit(self, cfg: DecoderConfig, chunk_frames: int | None,
+               sid: int | None = None) -> int:
+        """Shared admission core for ``open_session`` and checkpoint
+        ``restore`` (which replays saved sids)."""
+        bucket = self._bucket_for(cfg, chunk_frames)
+        if bucket.breaker.state != "closed":
+            bucket = self._failover_bucket(bucket)
+        if sid is None:
+            sid = self._next_sid
+            self._next_sid += 1
         # the server sanitizes at ITS push boundary (so strikes/counters
         # land on the session); the context's own scrub is off
         ctx = StreamContext(cfg.spec, cfg.trellis.beta, bucket.chunk_frames,
                             cfg.rate, sanitize="off")
         session = Session(sid, cfg, ctx, bucket)
+        session.chunk_frames_arg = chunk_frames
         self._sessions[sid] = session
         bucket.sessions.add(sid)
         return sid
@@ -296,6 +396,8 @@ class DecodeServer:
         (call step() to drain, then retry; a single push bigger than
         queue_depth chunks must be split by the caller)."""
         session = self._session(sid)
+        if self._draining:
+            raise Draining(f"push to session {sid}")
         if session.quarantined is not None:
             raise SessionQuarantined(sid, session.quarantined,
                                      session.strikes)
@@ -321,11 +423,24 @@ class DecodeServer:
         launches behind the dispatch front (the same double buffering the
         single-stream front-end uses), landing on each session's ready
         queue. Returns the number of windows dispatched. Never raises on
-        a failed launch — the retry/degrade machinery absorbs it."""
+        a failed launch — the retry/degrade machinery absorbs it. (The
+        fault injector's ``crash_at_step`` hook runs OUTSIDE that
+        machinery: an injected crash propagates, as a real process death
+        would.)"""
+        if self.faults is not None:
+            self.faults.crash("step")
         done = 0
-        for bucket in self._buckets.values():
+        for bucket in list(self._buckets.values()):
+            if not bucket.pinned:
+                bucket.breaker.step()         # open -> half_open countdown
+        for bucket in list(self._buckets.values()):
             if bucket.queue:
                 done += self._launch(bucket)
+            elif bucket.inflight:
+                # an evacuated (or idle) bucket materializes everything it
+                # still has in flight — fully, so its bits land on the
+                # sessions BEFORE any later window decoded elsewhere
+                self._retire(bucket, 0)
         return done
 
     def _launch(self, bucket: Bucket) -> int:
@@ -364,15 +479,106 @@ class DecodeServer:
         the path that must work when the fast path doesn't."""
         ref_cfg = dataclasses.replace(bucket.decode_cfg,
                                       backend="reference", renorm_every=1)
-        return self.cache.batch_decoder(ref_cfg, nframes, mesh=self.mesh)
+        return self.cache.batch_decoder(ref_cfg, nframes, mesh=bucket.mesh)
+
+    # -- circuit breaker / failover ---------------------------------------
+    def _evacuate(self, bucket: Bucket) -> None:
+        """Move every session (and queued window) of a tripped bucket to
+        its failover bucket — pinned to the reference backend on the
+        host. Window geometry is identical (same plan), so the pending
+        queue transfers losslessly; the ``evacuated`` counter and an
+        ``evacuate`` span record the event. The tripped bucket's in-flight
+        launches materialize FIRST — per-session bit order must survive
+        the handoff."""
+        target = self._failover_bucket(bucket)
+        moved = len(bucket.sessions)
+        self._retire(bucket, 0)
+        with self.trace.span("evacuate", bucket=bucket.id, to=target.id,
+                             sessions=moved, windows=len(bucket.queue)):
+            for sid in list(bucket.sessions):
+                session = self._sessions[sid]
+                session.bucket = target
+                target.sessions.add(sid)
+            bucket.sessions.clear()
+            target.queue.extend(bucket.queue)
+            bucket.queue.clear()
+        self.metrics.bucket(bucket.id).record_fault("evacuated", n=moved)
+
+    def _readmit(self, bucket: Bucket, primary: Bucket) -> None:
+        """The half-open probe succeeded: the device is back. Move the
+        failover bucket's sessions (and any still-queued windows) back to
+        the primary fast path — after materializing the failover's
+        in-flight launches (probe included), preserving bit order."""
+        self._retire(bucket, 0)
+        with self.trace.span("readmit", bucket=primary.id,
+                             sessions=len(bucket.sessions)):
+            for sid in list(bucket.sessions):
+                session = self._sessions[sid]
+                session.bucket = primary
+                primary.sessions.add(sid)
+            bucket.sessions.clear()
+            primary.queue.extend(bucket.queue)
+            bucket.queue.clear()
+
+    def _probe(self, primary: Bucket, bucket: Bucket, dev, batch, taken,
+               B: int) -> bool:
+        """Half-open probe: try this failover batch on the primary's
+        fast path. Success closes the breaker and re-admits the
+        sessions; failure re-opens it (a fresh trip) and the caller
+        falls back to the pinned reference path."""
+        bm = self.metrics.bucket(primary.id)
+        try:
+            with self.trace.span("breaker_probe", bucket=primary.id,
+                                 frames=B):
+                if self.faults is not None:
+                    self.faults.launch(primary.id)
+                out = self.cache.batch_decoder(primary.decode_cfg, B,
+                                               mesh=primary.mesh)(dev)
+        except Exception as e:                        # noqa: BLE001
+            bm.record_fault("launch_errors", error=repr(e))
+            if primary.breaker.record_failure():      # half_open -> open
+                bm.record_fault("breaker_trips")
+                self.trace.event("breaker_open", bucket=primary.id,
+                                 probe_failed=True)
+            return False
+        bucket.inflight.append(
+            (out, taken, batch,
+             self.trace.begin("inflight", bucket=bucket.id, frames=B,
+                              probe=True)))
+        if primary.breaker.record_success():          # half_open -> closed
+            self.trace.event("breaker_close", bucket=primary.id)
+        self._readmit(bucket, primary)
+        return True
 
     def _dispatch(self, bucket: Bucket, batch: np.ndarray, taken) -> None:
-        """Dispatch ``batch`` with deadline/retry/degrade (class
-        docstring). Always appends exactly one in-flight launch."""
+        """Dispatch ``batch`` with deadline/retry/degrade plus circuit
+        breaking (class docstring). Always appends exactly one in-flight
+        launch."""
         B = batch.shape[0]
         bm = self.metrics.bucket(bucket.id)
         dev = jnp.asarray(batch)
+        if bucket.pinned:
+            # failover path: probe the primary when its breaker is ready,
+            # otherwise decode on the pinned reference backend. Neither
+            # consults the fault injector — the evacuation target is the
+            # path that must work when the fast path doesn't (same
+            # contract as _ref_fallback).
+            primary = bucket.primary
+            if primary is not None \
+                    and primary.breaker.state == "half_open" \
+                    and self._probe(primary, bucket, dev, batch, taken, B):
+                return
+            with self.trace.span("launch_attempt", bucket=bucket.id,
+                                 pinned=True):
+                out = self.cache.batch_decoder(bucket.decode_cfg, B,
+                                               mesh=bucket.mesh)(dev)
+            bucket.inflight.append(
+                (out, taken, batch,
+                 self.trace.begin("inflight", bucket=bucket.id, frames=B,
+                                  pinned=True)))
+            return
         deadline = self.launch_timeout_s
+        tripped = False
         for attempt in range(self.max_retries + 1):
             t0 = time.perf_counter()
             try:
@@ -385,7 +591,7 @@ class DecodeServer:
                     if refresh:
                         bm.record_fault("cache_refreshes")
                     fn = self.cache.batch_decoder(bucket.decode_cfg, B,
-                                                  mesh=self.mesh,
+                                                  mesh=bucket.mesh,
                                                   refresh=refresh)
                     out = fn(dev)
                     if deadline is not None \
@@ -397,18 +603,32 @@ class DecodeServer:
                     (out, taken, batch,
                      self.trace.begin("inflight", bucket=bucket.id,
                                       frames=B)))
-                return
+                bucket.breaker.record_success()
+                if tripped:           # late success on an open breaker:
+                    self._evacuate(bucket)   # still fail over — the
+                return                       # probe path re-admits
             except LaunchTimeout as e:
                 bm.record_fault("timeouts", error=str(e))
             except Exception as e:                    # noqa: BLE001
                 bm.record_fault("launch_errors", error=repr(e))
+            if bucket.breaker.record_failure():
+                # consecutive failures crossed the threshold: the trip is
+                # recorded now, but the remaining retry budget still runs
+                # — a degraded window's accounting stays uniform
+                # (max_retries+1 attempts, max_retries retries) and a
+                # late success still lands the batch on the fast path
+                tripped = True
+                bm.record_fault("breaker_trips")
+                self.trace.event("breaker_open", bucket=bucket.id,
+                                 consecutive=bucket.breaker.consecutive)
             if attempt < self.max_retries:
                 bm.record_fault("retries")
                 self.trace.event("retry", bucket=bucket.id, attempt=attempt)
                 if self.backoff_s:
                     time.sleep(self.backoff_s * (2 ** attempt))
-        # retries exhausted: degrade to the reference fallback so healthy
-        # sessions still get (correct) bits — never drop the batch
+        # retries exhausted (or breaker tripped): degrade to the reference
+        # fallback so healthy sessions still get (correct) bits — never
+        # drop the batch
         bm.record_fault("degraded")
         with self.trace.span("degrade", bucket=bucket.id, frames=B):
             out = self._ref_fallback(bucket, B)(dev)
@@ -416,6 +636,8 @@ class DecodeServer:
             (out, taken, batch,
              self.trace.begin("inflight", bucket=bucket.id, frames=B,
                               degraded=True)))
+        if tripped or bucket.breaker.state != "closed":
+            self._evacuate(bucket)
 
     def _retire(self, bucket: Bucket, leave: int) -> int:
         """Materialize in-flight launches down to ``leave`` (blocks on the
@@ -467,15 +689,44 @@ class DecodeServer:
             done += len(taken)
         return done
 
-    def drain(self) -> int:
+    def drain(self, checkpoint: str | None = None, *,
+              stop: bool = False) -> int:
         """Dispatch until no bucket has pending windows, then materialize
-        every in-flight launch."""
+        every in-flight launch. With ``checkpoint=path`` (or
+        ``stop=True``) this is the operational stop-the-world handoff:
+        admission and pushes are refused FIRST (``Draining``), the
+        pipeline retires completely, and the quiesced server is
+        snapshotted — restart elsewhere with ``DecodeServer.restore``."""
+        if checkpoint is not None or stop:
+            self._draining = True
         done = 0
         while any(b.queue for b in self._buckets.values()):
             done += self.step()
         for bucket in self._buckets.values():
             self._retire(bucket, 0)
+        if checkpoint is not None:
+            self.checkpoint(checkpoint)
         return done
+
+    def checkpoint(self, path: str) -> str:
+        """Write an atomic, CRC-validated snapshot of the whole server to
+        ``path`` (serve/checkpoint.py). In-flight launches are retired
+        first — the snapshot is a consistent cut; sessions resume
+        bit-identically after ``restore``."""
+        from .checkpoint import save_checkpoint
+        return save_checkpoint(self, path)
+
+    @classmethod
+    def restore(cls, path: str, *, mesh=None, cache=None, faults=None,
+                trace=None) -> "DecodeServer":
+        """Rebuild a server from a checkpoint in a fresh process. The
+        process-local collaborators (mesh/cache/faults/trace) are passed
+        anew — they are not serializable state. Raises ``CheckpointError``
+        on a corrupt, truncated, or version-mismatched file; never
+        returns a half-loaded server."""
+        from .checkpoint import restore_server
+        return restore_server(cls, path, mesh=mesh, cache=cache,
+                              faults=faults, trace=trace)
 
     def poll(self, sid: int) -> np.ndarray:
         """Collect (and clear) a session's bits materialized so far —
@@ -501,6 +752,12 @@ class DecodeServer:
         self._retire(session.bucket, 0)
         session.closed = True
         session.bucket.sessions.discard(sid)
+        # an evacuated (or re-admitted) session may still have launches in
+        # flight on its partner bucket — retire those too before teardown
+        partner = (session.bucket.primary if session.bucket.pinned
+                   else self._buckets.get(session.bucket.key + ("failover",)))
+        if partner is not None:
+            self._retire(partner, 0)
         del self._sessions[sid]
         return session.take_ready()
 
@@ -523,8 +780,10 @@ class DecodeServer:
         throughput (``mbps``/``uptime_s``) and overall health;
         ``stages`` holds the queue-wait/pack/launch/retire latency
         summaries; ``quarantined_sessions`` counts live quarantined
-        sessions; ``faults`` reports the injector's schedule counters
-        when one is attached."""
+        sessions; ``breakers`` carries every primary bucket's circuit
+        breaker (state/trips/consecutive); ``checkpoint`` the save/
+        restore counts; ``faults`` reports the injector's schedule
+        counters when one is attached."""
         snap = {"buckets": self.metrics.snapshot(),
                 "totals": self.metrics.totals(),
                 "stages": self.metrics.stage_snapshot(),
@@ -532,7 +791,13 @@ class DecodeServer:
                 "sessions": len(self._sessions),
                 "quarantined_sessions": sum(
                     1 for s in self._sessions.values()
-                    if s.quarantined is not None)}
+                    if s.quarantined is not None),
+                "breakers": {b.id: b.breaker.snapshot()
+                             for b in self._buckets.values()
+                             if not b.pinned},
+                "checkpoint": {"saves": self.checkpoint_saves,
+                               "restores": self.checkpoint_restores},
+                "draining": self._draining}
         if self.faults is not None:
             snap["faults"] = self.faults.stats()
         return snap

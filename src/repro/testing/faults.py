@@ -39,10 +39,21 @@ import time
 import numpy as np
 
 __all__ = ["FaultSpec", "FaultInjector", "InjectedFault",
-           "InjectedKernelError", "KINDS"]
+           "InjectedKernelError", "InjectedDeviceLoss", "InjectedCrash",
+           "KINDS"]
 
 #: Recognized fault kinds (one hook point each; see module docstring).
-KINDS = ("launch_error", "launch_slow", "corrupt_llr", "plan_cache_miss")
+#: The durability kinds (PR 8): ``device_loss`` makes every launch of a
+#: matching bucket fail persistently over an ``after``/``count`` event
+#: window (drives the per-bucket circuit breaker open, then lets the
+#: half-open probe succeed once the window expires); ``crash_at_step``
+#: raises ``InjectedCrash`` out of ``DecodeServer.step()`` — a simulated
+#: process death the kill-restore-compare chaos test recovers from via
+#: checkpoint/restore; ``checkpoint_corrupt`` flips bytes in a
+#: checkpoint as it is written (the restore path must REJECT it with a
+#: structured error, never half-load).
+KINDS = ("launch_error", "launch_slow", "corrupt_llr", "plan_cache_miss",
+         "device_loss", "crash_at_step", "checkpoint_corrupt")
 
 #: corrupt_llr poison values by mode ('huge' is finite but far beyond any
 #: sane LLR magnitude — exercises the out-of-range clamp, not the
@@ -59,6 +70,20 @@ class InjectedKernelError(InjectedFault):
     compile or runtime error escaping the launch)."""
 
 
+class InjectedDeviceLoss(InjectedKernelError):
+    """An injected PERSISTENT launch failure (stands in for a lost /
+    wedged accelerator: every launch on that device fails until the
+    fault window closes). Subclasses InjectedKernelError so the serve
+    retry machinery sees it as a launch error — the point is that
+    retries do NOT clear it, which is what trips the circuit breaker."""
+
+
+class InjectedCrash(InjectedFault):
+    """An injected process crash (raised out of ``DecodeServer.step``,
+    NOT caught by the server's own fault handling — the process is
+    'dead'; recovery is checkpoint/restore in a fresh server)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One scheduled fault.
@@ -66,18 +91,29 @@ class FaultSpec:
     kind:     one of ``KINDS``.
     p:        per-event probability (seeded; 0 disables).
     every:    also fire deterministically on every Nth event (0 disables).
+    after:    also fire deterministically on every event from the
+              ``after``-th onward (0 disables) — a PERSISTENT fault
+              window, bounded by ``count``. This is how device_loss and
+              crash_at_step schedules are written.
+    count:    with ``after``: how many consecutive events fire (0 =
+              unbounded).
     delay_s:  launch_slow — simulated hang duration in seconds.
     mode:     corrupt_llr — 'nan' | 'inf' | 'huge'.
     frac:     corrupt_llr — fraction of entries poisoned (at least one).
     sessions: corrupt_llr — restrict to these session ids (empty = all).
+    bucket:   device_loss — restrict to bucket ids containing this
+              substring ('' = every bucket; the 'device' that dies).
     """
     kind: str
     p: float = 0.0
     every: int = 0
+    after: int = 0
+    count: int = 0
     delay_s: float = 0.0
     mode: str = "nan"
     frac: float = 0.25
     sessions: tuple = ()
+    bucket: str = ""
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -87,7 +123,8 @@ class FaultSpec:
             raise ValueError(f"unknown corrupt_llr mode {self.mode!r}; "
                              f"expected one of {tuple(_POISON)}")
         if not (0.0 <= self.p <= 1.0 and 0.0 < self.frac <= 1.0
-                and self.every >= 0 and self.delay_s >= 0.0):
+                and self.every >= 0 and self.delay_s >= 0.0
+                and self.after >= 0 and self.count >= 0):
             raise ValueError(f"out-of-range FaultSpec parameters: {self}")
 
 
@@ -114,6 +151,9 @@ class FaultInjector:
         hit = None
         for spec in self._specs.get(kind, ()):
             fires = spec.every > 0 and n % spec.every == 0
+            if spec.after > 0 and n >= spec.after \
+                    and (spec.count == 0 or n < spec.after + spec.count):
+                fires = True
             if spec.p > 0.0 and self._rng.random() < spec.p:
                 fires = True
             if fires and hit is None and (accept is None or accept(spec)):
@@ -124,7 +164,16 @@ class FaultInjector:
 
     # -- hooks (all no-ops unless a matching spec fires) -------------------
     def launch(self, bucket_id: str = "") -> None:
-        """Launch-path hook: may sleep (slow launch) and/or raise."""
+        """Launch-path hook: may sleep (slow launch) and/or raise. A
+        matching ``device_loss`` spec raises ``InjectedDeviceLoss`` —
+        persistent over its after/count window, which is what drives a
+        bucket's circuit breaker open."""
+        loss = self._fire("device_loss",
+                          accept=lambda s: s.bucket in bucket_id)
+        if loss is not None:
+            raise InjectedDeviceLoss(
+                f"injected device loss (bucket {bucket_id or '?'}): every "
+                f"launch on this device fails")
         slow = self._fire("launch_slow")
         if slow is not None:
             time.sleep(slow.delay_s)
@@ -154,6 +203,30 @@ class FaultInjector:
     def plan_cache_miss(self) -> bool:
         """Cache-lookup hook: True forces a rebuild of the cached plan."""
         return self._fire("plan_cache_miss") is not None
+
+    def crash(self, where: str = "step") -> None:
+        """Crash hook (``DecodeServer.step`` calls it first thing): a
+        firing ``crash_at_step`` spec raises ``InjectedCrash`` — the
+        simulated process death. Deliberately OUTSIDE the server's
+        try/except fault handling: nothing in the dying process recovers;
+        a fresh process restores from the last checkpoint."""
+        if self._fire("crash_at_step") is not None:
+            raise InjectedCrash(
+                f"injected crash at {where} event "
+                f"{self._events['crash_at_step']}")
+
+    def checkpoint_bytes(self, data: bytes) -> bytes:
+        """Checkpoint-write hook: a firing ``checkpoint_corrupt`` spec
+        returns ``data`` with bytes flipped mid-payload (torn/bit-rotted
+        write). The restore path must detect it via the CRC and refuse
+        to load — never half-restore."""
+        if self._fire("checkpoint_corrupt") is None or len(data) < 8:
+            return data
+        out = bytearray(data)
+        mid = len(out) // 2
+        for i in range(mid, min(mid + 4, len(out))):
+            out[i] ^= 0x5A
+        return bytes(out)
 
     def stats(self) -> dict:
         """JSON-ready counters: hook events seen / faults injected."""
