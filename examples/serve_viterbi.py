@@ -115,8 +115,10 @@ def main(argv=None):
                                count=1))
     faults = FaultInjector(*specs, seed=3) if specs else None
     cache = PlanCache()
-    ck_path = (os.path.join(args.checkpoint_dir, "serve.ckpt")
-               if args.checkpoint_dir else None)
+    ck_path = None
+    if args.checkpoint_dir:
+        os.makedirs(args.checkpoint_dir, exist_ok=True)
+        ck_path = os.path.join(args.checkpoint_dir, "serve.ckpt")
     if args.resume and ck_path and os.path.exists(ck_path):
         srv = DecodeServer.restore(ck_path, cache=cache, faults=faults)
         for sid in list(srv._sessions):

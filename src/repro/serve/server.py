@@ -603,7 +603,13 @@ class DecodeServer:
                     (out, taken, batch,
                      self.trace.begin("inflight", bucket=bucket.id,
                                       frames=B)))
-                bucket.breaker.record_success()
+                if bucket.breaker.state != "open":
+                    # a late success after the breaker tripped mid-retry
+                    # must NOT reset `consecutive`: the breaker stays
+                    # open (only the half-open probe closes it), and its
+                    # snapshot should keep reporting the streak that
+                    # tripped it, not a misleading 0
+                    bucket.breaker.record_success()
                 if tripped:           # late success on an open breaker:
                     self._evacuate(bucket)   # still fail over — the
                 return                       # probe path re-admits

@@ -189,6 +189,62 @@ def test_restore_preserves_metrics_counters_and_uptime():
             == before["stages"]["launch_ms"]["count"])
 
 
+def test_checkpoint_after_tenant_churn_restores():
+    """Regression: buckets (and their breakers) outlive their last
+    session in the saving server, so a checkpoint taken after normal
+    tenant churn (open -> drain -> close) carries breaker state for a
+    bucket restore cannot rebuild. The orphan breaker entry must be
+    dropped, not rejected as 'unknown bucket' — and a bucket that DOES
+    still have a live session keeps its breaker across the trip."""
+    cfg12 = DecoderConfig(spec=SPEC)
+    cfg34 = DecoderConfig(spec=SPEC34, rate="3/4")
+    srv = DecodeServer(slots=2, cache=PlanCache())
+    churned = srv.open_session(cfg12, chunk_frames=2)
+    srv.push(churned, _rx(4 * 64, seed=80))
+    srv.drain()
+    srv.close_session(churned)                   # bucket stays in _buckets
+    live = srv.open_session(cfg34, chunk_frames=3)
+    rx34 = _rx(630, "3/4", seed=81)
+    srv.push(live, rx34[:301])
+    path = "/tmp/test_serve_ckpt_churn.json"
+    srv.checkpoint(path)
+
+    srv2 = DecodeServer.restore(path, cache=PlanCache())
+    assert srv2.num_sessions == 1
+    # only the live session's bucket came back; its breaker survived
+    assert list(srv2.metrics_snapshot()["breakers"].values()) \
+        == [{"state": "closed", "trips": 0, "consecutive": 0}]
+    # the surviving stream resumes bit-identically...
+    srv2.push(live, rx34[301:])
+    got = np.concatenate([srv2.poll(live), srv2.close_session(live)])[:630]
+    assert np.array_equal(got, stream_decode(cfg34, rx34, 630,
+                                             chunk_frames=3))
+    # ...and fresh tenants of the churned config admit + decode normally
+    rx = _rx(4 * 64, seed=82)
+    sid = srv2.open_session(cfg12, chunk_frames=2)
+    srv2.push(sid, rx)
+    got = np.concatenate([srv2.poll(sid), srv2.close_session(sid)])
+    assert np.array_equal(got, stream_decode(cfg12, rx, 4 * 64,
+                                             chunk_frames=2))
+
+
+def test_checkpoint_all_sessions_closed_restores_empty():
+    """The reviewer's minimal repro: every session closed, then
+    checkpoint — the restore must succeed with zero sessions, not raise
+    CheckpointError over the left-behind bucket's breaker state."""
+    cfg = DecoderConfig(spec=SPEC)
+    srv = DecodeServer(slots=2, cache=PlanCache())
+    sid = srv.open_session(cfg, chunk_frames=2)
+    srv.push(sid, _rx(4 * 64, seed=83))
+    srv.drain()
+    srv.close_session(sid)
+    path = "/tmp/test_serve_ckpt_churn_empty.json"
+    srv.checkpoint(path)
+    srv2 = DecodeServer.restore(path, cache=PlanCache())
+    assert srv2.num_sessions == 0
+    assert srv2.metrics_snapshot()["breakers"] == {}
+
+
 def test_corrupt_and_mismatched_checkpoints_are_rejected():
     cfg = DecoderConfig(spec=SPEC)
     srv = DecodeServer(cache=PlanCache())
@@ -340,6 +396,28 @@ def test_open_breaker_routes_new_sessions_to_failover():
     s2 = srv.open_session(cfg, chunk_frames=2)   # admitted mid-outage
     assert srv._sessions[s2].bucket.pinned       # straight to failover
     srv.close_session(s1), srv.close_session(s2)
+
+
+def test_breaker_open_snapshot_keeps_trip_streak_on_late_success():
+    """A launch that trips the breaker mid-retry but succeeds on a later
+    attempt still fails over (the probe path re-admits) — and the open
+    breaker's snapshot keeps reporting the consecutive streak that
+    tripped it, not a misleading 0 from the late success."""
+    cfg = DecoderConfig(spec=SPEC)
+    faults = FaultInjector(FaultSpec("device_loss", after=1, count=2),
+                           seed=0)
+    srv = DecodeServer(slots=2, cache=PlanCache(), max_retries=2,
+                       breaker_threshold=2, breaker_cooldown=1000,
+                       backoff_s=0.0, faults=faults)
+    sid = srv.open_session(cfg, chunk_frames=2)
+    primary = srv._sessions[sid].bucket
+    srv.push(sid, _rx(4 * 64, seed=84))
+    srv.step()            # fail, fail (trip), late success -> evacuate
+    assert srv._sessions[sid].bucket.pinned
+    row = srv.metrics_snapshot()["breakers"][primary.id]
+    assert row["state"] == "open"
+    assert row["consecutive"] >= srv.breaker_threshold
+    srv.close_session(sid)
 
 
 def test_checkpoint_mid_outage_restores_evacuated_placement():
