@@ -388,6 +388,53 @@ def serve_faults_bench(full: bool = False):
              "health": tot["health"]}]
 
 
+def block_bench(full: bool = False):
+    """Intra-frame block-parallel decode vs the sequential single-scan
+    plan on a FEW-long-frames workload (the 'block' trajectory section).
+
+    A handful of f=4096 frames — the latency scenario block mode exists
+    for (one long serve window, not a deep batch) — decoded by the same
+    unified kernel twice under the same VMEM budget. The sequential
+    variant scans all v1+f+v2 stages per grid step and cannot fill even
+    the minimum 8-frame tile, so most of its per-step width is padding;
+    the blocked variant lets resolve_block split each frame into ~32
+    blocks of f/B + 2*overlap stages laid out on the frame axis, which
+    fill a wide tile exactly — the tentpole mechanism ("a single long
+    frame fills a tile the way many short frames do"). Interpret mode =>
+    relative numbers; the acceptance criterion (blocked >= 1.5x
+    sequential at L >= 4096, equal VMEM budget) is asserted here so the
+    trajectory can never silently record a regressed decomposition.
+    """
+    from repro.kernels.block import resolve_block
+    rng = np.random.default_rng(0)
+    spec = FrameSpec(f=4096, v1=32, v2=32, f0=32, v2s=32)
+    nframes = 4 if full else 2
+    n = nframes * spec.f
+    llr = jnp.asarray(rng.standard_normal((n, 2)).astype(np.float32))
+    frames = frame_llr(llr, spec)
+    bf, ov = resolve_block(STD_K7, spec, "auto", None)
+    assert bf > 1, "auto policy must engage at f=4096"
+
+    rows = []
+    by_variant = {}
+    for variant, B, o in (("sequential", 1, 0), ("blocked", bf, ov)):
+        fn = jax.jit(lambda fr, B=B, o=o: ops.viterbi_decode_frames(
+            fr, STD_K7, spec, frames_per_tile="auto", layout="sublane",
+            block_frames=B, overlap=o, interpret=True))
+        dt = _time_best(fn, frames, reps=2)
+        mbps = n / dt / 1e6
+        by_variant[variant] = mbps
+        rows.append({"table": "block", "variant": variant, "f": spec.f,
+                     "block_frames": B, "overlap": o, "n_bits": n,
+                     "reps": 2, "us_per_call": dt * 1e6, "mbps": mbps})
+    ratio = by_variant["blocked"] / by_variant["sequential"]
+    assert ratio >= 1.5, (
+        f"acceptance criterion failed: block-parallel decode is only "
+        f"{ratio:.2f}x the sequential-scan plan at f={spec.f} (needs "
+        f">= 1.5x at equal VMEM budget)")
+    return rows
+
+
 def plan_rows():
     """Tile plans across layouts/models at the default 2 MiB budget — the
     BENCH_kernels.json record behind the layout acceptance criterion
@@ -417,9 +464,29 @@ def plan_rows():
     return rows
 
 
-def main(full: bool = False):
-    n = 4_000_000 if full else 1_000_000
-    rows = table4(n) + table5(n) + unified_vs_split()
+#: Every runnable bench section, by the name the ``--sections`` CLI
+#: filter (and CI smoke jobs) selects it with. Each entry takes ``full``.
+SECTIONS = {
+    "table4": lambda full: table4(4_000_000 if full else 1_000_000),
+    "table5": lambda full: table5(4_000_000 if full else 1_000_000),
+    "unified_vs_split": lambda full: unified_vs_split(),
+    "kernels": kernel_sweep,
+    "streaming": streaming_bench,
+    "serve": serve_bench,
+    "serve_faults": serve_faults_bench,
+    "plans": lambda full: plan_rows(),
+    "block": block_bench,
+}
+
+#: The historical default — what plain ``python benchmarks/throughput.py``
+#: has always printed (paper Tables IV/V + the Table I comparison).
+DEFAULT_SECTIONS = "table4,table5,unified_vs_split"
+
+
+def main(full: bool = False, sections: str = DEFAULT_SECTIONS):
+    rows = []
+    for name in sections.split(","):
+        rows += SECTIONS[name.strip()](full)
     for r in rows:
         print(",".join(f"{k}={v}" if not isinstance(v, float)
                        else f"{k}={v:.2f}" for k, v in r.items()))
@@ -429,30 +496,40 @@ def main(full: bool = False):
 def _cli(argv=None):
     import argparse
     ap = argparse.ArgumentParser(
-        description="paper-table throughput benches (Tables IV/V + "
-                    "unified-vs-split)")
+        description="decoder throughput benches (paper Tables IV/V, "
+                    "unified-vs-split, kernel sweep, streaming, serve, "
+                    "block-parallel)")
     ap.add_argument("--full", action="store_true",
                     help="4M-bit workload instead of the 1M-bit quick run")
+    ap.add_argument("--sections", default=DEFAULT_SECTIONS,
+                    help=f"comma-separated subset of "
+                         f"{','.join(SECTIONS)} to run (so a CI smoke "
+                         f"job can run one section alone); default: "
+                         f"{DEFAULT_SECTIONS}")
     ap.add_argument("--trace-out", metavar="PATH",
                     help="record the bench under the obs tracer and write "
-                         "a Chrome trace-event JSON (each table runs as "
+                         "a Chrome trace-event JSON (each section runs as "
                          "one span; plan_decode/kernel_trace events show "
                          "what compiled)")
     args = ap.parse_args(argv)
+    names = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = [s for s in names if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; choose from "
+                 f"{sorted(SECTIONS)}")
+    if not names:
+        ap.error("--sections selected nothing")
     if not args.trace_out:
-        return main(full=args.full)
+        return main(full=args.full, sections=",".join(names))
 
     from repro.obs import Tracer, set_tracer, write_chrome_trace
     tracer = Tracer()
     set_tracer(tracer)
     try:
-        n = 4_000_000 if args.full else 1_000_000
         rows = []
-        for name, fn in (("table4", lambda: table4(n)),
-                         ("table5", lambda: table5(n)),
-                         ("unified_vs_split", unified_vs_split)):
+        for name in names:
             with tracer.span(f"bench:{name}") as sp:
-                section = fn()
+                section = SECTIONS[name](args.full)
                 sp.set(rows=len(section))
             rows += section
         for r in rows:

@@ -18,8 +18,20 @@ import os
 SCHEMA = "kernel_sweep/v2"
 DEFAULT_PATH = "BENCH_kernels.json"
 
-__all__ = ["SCHEMA", "DEFAULT_PATH", "load_runs", "append_run", "best_mbps",
-           "serve_mbps", "serve_under_faults_mbps"]
+__all__ = ["SCHEMA", "DEFAULT_PATH", "platform", "load_runs", "append_run",
+           "best_mbps", "serve_mbps", "serve_under_faults_mbps",
+           "block_mbps"]
+
+
+def platform() -> dict:
+    """The JAX backend/device identity of THIS process — stamped on every
+    run so the regression gate never compares, say, an interpret-CPU
+    point against a compiled-TPU point (same code, ~100x apart). Lazy
+    import: loading the trajectory store must not initialize JAX."""
+    import jax
+    return {"backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "jax_version": jax.__version__}
 
 
 def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
@@ -54,7 +66,11 @@ def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
 
 
 def append_run(run: dict, path: str = DEFAULT_PATH) -> list[dict]:
-    """Append ``run`` to the trajectory and rewrite ``path``."""
+    """Append ``run`` to the trajectory and rewrite ``path``. Every run
+    is stamped with the producing process's ``platform`` (unless the
+    caller already set one), so cross-platform points are separable
+    forever after."""
+    run.setdefault("platform", platform())
     runs = load_runs(path)
     runs.append(run)
     with open(path, "w") as fh:
@@ -91,3 +107,12 @@ def serve_under_faults_mbps(run: dict) -> float:
     matching (sessions, n_bits) like the clean serve section."""
     return max((r["mbps"] for r in run.get("serve_faults", [])
                 if r.get("variant") == "server_faults"), default=0.0)
+
+
+def block_mbps(run: dict, variant: str = "blocked") -> float:
+    """Throughput of a run's "block" section (throughput.block_bench):
+    ``variant`` picks the intra-frame block-parallel decode ("blocked")
+    or the sequential single-scan plan of the same long-frame workload
+    ("sequential"). 0.0 when the run predates the block trajectory."""
+    return max((r["mbps"] for r in run.get("block", [])
+                if r.get("variant") == variant), default=0.0)

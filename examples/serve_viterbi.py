@@ -34,6 +34,20 @@ Durability (PR 8):
   carried-over sessions) from DIR/serve.ckpt at startup instead of
   building a fresh server.
 
+Block-parallel decode (PR 9):
+
+  ``--block-frames B`` (or ``auto``) switches the demo to a single
+  long-frame (f=2048) tenant config decoded with intra-frame
+  block-parallel mode — each frame is split into B overlapped blocks so
+  one frame fills a tile the way many short frames do. ``--overlap``
+  overrides the per-block warm-up/truncation depth (default ~5
+  constraint lengths). The per-window launch latency (from the existing
+  stage histograms) is printed either way, so the latency win is visible
+  by rerunning with ``--block-frames 1``:
+
+  PYTHONPATH=src python examples/serve_viterbi.py --sessions 2 \\
+      --chunks 2 --chunk-frames 2 --block-frames auto
+
 (For the unrelated LM continuous-batching demo, see examples/serve_lm.py.)
 """
 import argparse
@@ -84,7 +98,19 @@ def main(argv=None):
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write a Chrome trace-event JSON of the run "
                          "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--block-frames", default=None, metavar="B|auto",
+                    help="intra-frame block-parallel decode: split each "
+                         "frame into B overlapped blocks ('auto' lets the "
+                         "planner pick); any value switches the demo to a "
+                         "long-frame (f=2048) workload, so '1' is the "
+                         "sequential baseline of the same workload")
+    ap.add_argument("--overlap", type=int, default=None, metavar="OV",
+                    help="per-block warm-up/truncation overlap in trellis "
+                         "stages (default: policy, ~5 constraint lengths)")
     args = ap.parse_args(argv)
+    blk = args.block_frames
+    if blk is not None and blk != "auto":
+        blk = int(blk)
     if args.kill_at_step and not args.checkpoint_dir:
         args.checkpoint_dir = tempfile.mkdtemp(prefix="serve_ckpt_")
 
@@ -99,6 +125,13 @@ def main(argv=None):
     cfgs = [("K7 r1/2", DecoderConfig(spec=spec12)),
             ("K7 r3/4", DecoderConfig(spec=spec34, rate="3/4")),
             ("K5 r1/2", DecoderConfig(trellis=k5, spec=spec12))]
+    if blk is not None:
+        # short frames never block (policy threshold) — the latency win
+        # is the point, so block mode runs one long-frame tenant config;
+        # --block-frames 1 is the sequential baseline of that workload
+        spec_long = FrameSpec(f=2048, v1=32, v2=32, f0=32, v2s=32)
+        cfgs = [("K7 long", DecoderConfig(spec=spec_long, block_frames=blk,
+                                          overlap=args.overlap))]
 
     from repro.testing import FaultInjector, FaultSpec
     from repro.testing.faults import InjectedCrash
@@ -235,6 +268,16 @@ def main(argv=None):
     for stage, s in sorted(snap["stages"].items()):
         print(f"{stage:<16}{s['count']:>7}{s['p50']:>8.2f}{s['p99']:>8.2f}"
               f"{s['max']:>8.2f}")
+    la = snap["stages"].get("launch_ms")
+    if la and la.get("count"):
+        blocked = blk not in (None, 1)
+        mode = (f"block-parallel ({args.block_frames} blocks/frame)"
+                if blocked else "sequential scan")
+        hint = (" — rerun with --block-frames 1 to compare" if blocked
+                else " — rerun with --block-frames auto for the blocked "
+                     "plan")
+        print(f"per-window launch latency [{mode}]: p50 {la['p50']:.2f} ms, "
+              f"p99 {la['p99']:.2f} ms over {la['count']} launches{hint}")
     print("plan cache:", snap["plan_cache"])
     if ck_path:
         print(f"checkpoints: {snap['checkpoint']['saves']} saved, "

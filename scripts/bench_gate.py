@@ -2,11 +2,14 @@
 """Benchmark-regression gate (scripts/ci.sh).
 
 Runs the interpret-mode kernel sweep + streaming bench + multi-tenant
-serve bench + serve-under-faults bench + tile-plan report, APPENDS the
-run to BENCH_kernels.json (keeping the per-PR trajectory), and fails when
-the best kernel configuration OR the serve aggregate throughput (clean or
-under fault injection) regresses more than ``BENCH_GATE_TOL`` (default
-20%) against the best comparable run already stored. Timing is
+serve bench + serve-under-faults bench + block-parallel bench + tile-plan
+report, APPENDS the run to BENCH_kernels.json (keeping the per-PR
+trajectory), and fails when the best kernel configuration OR the serve
+aggregate throughput (clean or under fault injection) OR the block-
+parallel throughput regresses more than ``BENCH_GATE_TOL`` (default
+20%) against the best comparable run already stored. Runs are stamped
+with the producing platform (trajectory.platform) and only compared
+against stored runs of the SAME backend/device kind. Timing is
 min-of-reps, which absorbs most shared-runner noise; the tolerance
 absorbs the rest.
 
@@ -85,9 +88,20 @@ def _section(run: dict, name: str, required_variant: str | None = None):
     return rows
 
 
+#: Platform a run without a recorded platform stamp is assumed to be from:
+#: every pre-stamp trajectory point was produced by interpret-mode CPU runs.
+_LEGACY_PLATFORM = {"backend": "cpu", "device_kind": "cpu"}
+
+
+def _run_platform(run: dict) -> dict:
+    p = run.get("platform") or _LEGACY_PLATFORM
+    return {"backend": p.get("backend"), "device_kind": p.get("device_kind")}
+
+
 def main() -> int:
     from benchmarks.trajectory import (DEFAULT_PATH, append_run, best_mbps,
-                                       serve_mbps, serve_under_faults_mbps)
+                                       block_mbps, platform, serve_mbps,
+                                       serve_under_faults_mbps)
 
     tol = float(os.environ.get("BENCH_GATE_TOL", "0.2"))
     path = os.environ.get("BENCH_PATH", DEFAULT_PATH)
@@ -114,20 +128,31 @@ def main() -> int:
     serve_rows = timed("serve", lambda: throughput.serve_bench(full=False))
     faults_rows = timed("serve_faults",
                         lambda: throughput.serve_faults_bench(full=False))
+    block_rows = timed("block", lambda: throughput.block_bench(full=False))
     plans = timed("plans", throughput.plan_rows)
     run = {"full": False, "rows": rows, "streaming": stream_rows,
            "serve": serve_rows, "serve_faults": faults_rows,
-           "plans": plans, "section_s": section_s, "gate": True}
+           "block": block_rows, "plans": plans, "section_s": section_s,
+           "gate": True}
     if not rows:
         raise GateError("kernel_sweep returned no rows — nothing to gate")
     cur = best_mbps(run)
     n_bits = rows[0]["n_bits"]
 
-    # only compare runs of the same workload size (full flag + n_bits)
+    # only compare runs of the same workload size (full flag + n_bits) AND
+    # the same platform (backend + device kind): an interpret-CPU point
+    # must never be gated against a compiled/TPU point — same code, orders
+    # of magnitude apart (pre-stamp legacy runs were all interpret-CPU)
+    cur_plat = _run_platform({"platform": platform()})
     comparable = [r for r in prior
                   if not r.get("full")
+                  and _run_platform(r) == cur_plat
                   and all(row.get("n_bits") == n_bits
                           for row in r.get("rows", []))]
+    skipped_plat = sum(1 for r in prior if _run_platform(r) != cur_plat)
+    if skipped_plat:
+        print(f"bench gate: ignoring {skipped_plat} stored run(s) from a "
+              f"different platform (this run: {cur_plat})")
     append_run(run, path)
 
     print("bench gate: section wall time — "
@@ -193,6 +218,31 @@ def main() -> int:
     else:
         print("bench gate: no comparable stored serve-under-faults "
               "baseline — recorded only")
+
+    # block section: intra-frame block-parallel vs sequential-scan plan on
+    # the long-frame workload; block_bench already asserts the >= 1.5x
+    # acceptance ratio, the gate additionally tracks the blocked Mb/s
+    # trajectory like the serve sections
+    brow = _section(run, "block", "blocked")
+    blk = block_mbps(run)
+    seq = block_mbps(run, "sequential")
+    print(f"bench gate: block f={brow['f']} x{brow['block_frames']} "
+          f"(overlap {brow['overlap']}) — blocked {blk:.2f} Mb/s vs "
+          f"sequential {seq:.2f} Mb/s ({blk / seq:.1f}x)")
+    block_comp = [block_mbps(r) for r in comparable
+                  if any(row.get("variant") == "blocked"
+                         and row.get("n_bits") == brow["n_bits"]
+                         for row in r.get("block", []))]
+    if block_comp:
+        bbase = max(block_comp)
+        print(f"bench gate: stored block baseline {bbase:.2f} Mb/s "
+              f"(floor {(1 - tol) * bbase:.2f})")
+        if blk < (1.0 - tol) * bbase:
+            fail.append(f"block-parallel throughput regressed "
+                        f"{(1 - blk / bbase):.0%} (> {tol:.0%})")
+    else:
+        print("bench gate: no comparable stored block baseline — "
+              "recorded only")
 
     if not comparable:
         print("bench gate: no comparable stored baseline — recorded only")

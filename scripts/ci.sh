@@ -72,6 +72,56 @@ assert opt < 3.0 * seed, f"gross perf regression: {opt:.3f}s vs {seed:.3f}s"
 print("SMOKE_OK")
 EOF
 
+# ---- block smoke: the intra-frame block-parallel decode's two exactness
+# gates. (a) degenerate: when overlap covers the whole frame, the blocked
+# kernel decode must be BIT-IDENTICAL to the unblocked one; (b) long-frame
+# BER: blocking a f=4096 stream with the auto policy (~5K overlap) must
+# stay within 1e-3 BER of the sequential exact decode at the gated SNR.
+python - <<'EOF'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import DecoderConfig, FrameSpec, STD_K7, encode, make_decoder
+from repro.core.framed import frame_llr
+from repro.channel.sim import awgn, bpsk
+from repro.kernels import ops
+from repro.kernels.block import full_overlap, resolve_block
+
+rng = np.random.default_rng(0)
+
+# (a) degenerate full-overlap bit-identity on the kernel path
+spec = FrameSpec(f=64, v1=16, v2=20)
+llr = jnp.asarray(rng.standard_normal((8 * spec.f, 2)).astype(np.float32))
+frames = frame_llr(llr, spec)
+B = 4
+ov = full_overlap(spec, B)
+plain = ops.viterbi_decode_frames(frames, STD_K7, spec)
+blocked = ops.viterbi_decode_frames(frames, STD_K7, spec,
+                                    block_frames=B, overlap=ov)
+assert np.array_equal(np.asarray(plain), np.asarray(blocked)), \
+    "degenerate full-overlap blocking is NOT bit-identical"
+
+# (b) long-frame BER gate: auto blocking vs sequential exact decode
+spec_l = FrameSpec(f=4096, v1=32, v2=32, f0=32, v2s=32)
+bf, ovr = resolve_block(STD_K7, spec_l, "auto", None)
+assert bf > 1, f"auto policy did not engage at f={spec_l.f}"
+n = 8 * spec_l.f
+bits = jnp.asarray(rng.integers(0, 2, n))
+tx = bpsk(encode(bits, STD_K7).reshape(-1))
+rx = jnp.asarray(np.asarray(
+    awgn(jax.random.PRNGKey(3), tx, 2.0)).reshape(n, 2))
+seq = make_decoder(DecoderConfig(spec=spec_l))
+blk = make_decoder(DecoderConfig(spec=spec_l, block_frames="auto"))
+want = np.asarray(bits)
+ber_seq = float(np.mean(np.asarray(seq(rx, n)) != want))
+ber_blk = float(np.mean(np.asarray(blk(rx, n)) != want))
+assert abs(ber_blk - ber_seq) < 1e-3, \
+    f"block BER gate: |{ber_blk:.2e} - {ber_seq:.2e}| >= 1e-3"
+print(f"block smoke: degenerate x{B} (overlap {ov}) bit-exact; "
+      f"f={spec_l.f} auto -> x{bf} (overlap {ovr}), "
+      f"BER {ber_blk:.2e} vs sequential {ber_seq:.2e} @ 2 dB")
+print("BLOCK_SMOKE_OK")
+EOF
+
 # ---- serve smoke: 8 concurrent sessions across 3 code configs through
 # the multi-tenant DecodeServer must be bit-identical to each session's
 # solo stream_decode, with one plan-cache trace per bucket shape.

@@ -19,7 +19,8 @@ from .decoder import viterbi_forward
 from .traceback import parallel_traceback, serial_traceback
 from .trellis import Trellis
 
-__all__ = ["FrameSpec", "frame_llr", "decode_frame", "framed_decode"]
+__all__ = ["FrameSpec", "frame_llr", "decode_frame", "framed_decode",
+           "reframe_blocks", "merge_blocks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +55,43 @@ class FrameSpec:
                     f"v2s={self.v2s} exceeds v2={self.v2}; the subframe "
                     f"convergence overlap must fit in the frame overlap")
 
+    def blocked(self, block_frames: int, overlap: int) -> "FrameSpec":
+        """The per-block FrameSpec of the intra-frame block-parallel
+        decode: each frame's f kept stages split into ``block_frames``
+        blocks of ``f / block_frames`` stages, every block carrying an
+        ``overlap``-stage training region on the left (metric warm-up)
+        and truncation region on the right (traceback convergence) — the
+        standard block-based truncated-traceback construction (arXiv
+        1608.00066). Blocks are just shorter frames, so the derived spec
+        is decoded by the unchanged frame machinery; a parallel-traceback
+        geometry carries over (f0 must divide the block, v2s must fit the
+        block overlap)."""
+        B, ov = int(block_frames), int(overlap)
+        if B < 1:
+            raise ValueError(f"block_frames must be >= 1, got {block_frames}")
+        if ov < 0:
+            raise ValueError(f"overlap must be >= 0, got {overlap}")
+        if self.f % B != 0:
+            raise ValueError(
+                f"f={self.f} is not a multiple of block_frames={B}; "
+                f"intra-frame blocking needs f % block_frames == 0")
+        fb = self.f // B
+        if self.parallel_tb:
+            if fb % self.f0 != 0:
+                raise ValueError(
+                    f"block length f/block_frames={fb} is not a multiple "
+                    f"of f0={self.f0}; shrink f0 or use fewer blocks")
+            if self.v2s > ov:
+                raise ValueError(
+                    f"v2s={self.v2s} exceeds the block overlap={ov}; the "
+                    f"subframe convergence region must fit in it")
+        sub = FrameSpec(f=fb, v1=ov, v2=ov,
+                        f0=self.f0 if self.parallel_tb else 0,
+                        v2s=self.v2s if self.parallel_tb else 0,
+                        start=self.start)
+        sub.validate()
+        return sub
+
 
 def frame_llr(llr: jax.Array, spec: FrameSpec) -> jax.Array:
     """(n, beta) -> (F, L, beta) overlapping frames, zero-padded at edges.
@@ -83,6 +121,39 @@ def decode_frame(llr_frame: jax.Array, trellis: Trellis,
                                   spec.f0, spec.v2s, spec.start)
     start = jnp.argmax(sigma).astype(jnp.int32)
     return serial_traceback(sel, trellis, start, spec.v1, spec.f)
+
+
+def reframe_blocks(frames: jax.Array, spec: FrameSpec, block_frames: int,
+                   overlap: int) -> jax.Array:
+    """(F, L, beta) frames -> (F*B, fb + 2*overlap, beta) block windows.
+
+    Block b of a frame covers frame stages
+    ``[v1 + b*fb - overlap, v1 + (b+1)*fb + overlap)`` — its fb kept
+    stages plus the training/truncation overlaps — gathered exactly like
+    ``frame_llr`` gathers frames from the stream, with zero padding where
+    a window reaches past the frame (zero LLR is metric-neutral, the same
+    edge treatment as frame_llr / depuncturing). When
+    ``overlap <= min(v1, v2)`` every window lies inside the frame and the
+    blocked decode is bit-identical to re-framing the stream with
+    ``spec.blocked(block_frames, overlap)``."""
+    F = frames.shape[0]
+    B, ov = int(block_frames), int(overlap)
+    fb = spec.f // B
+    pad_l = max(0, ov - spec.v1)
+    pad_r = max(0, ov - spec.v2)
+    padded = jnp.pad(frames, ((0, 0), (pad_l, pad_r), (0, 0)))
+    starts = pad_l + spec.v1 - ov + jnp.arange(B) * fb
+    idx = starts[:, None] + jnp.arange(fb + 2 * ov)[None, :]
+    blocks = padded[:, idx]                           # (F, B, Lb, beta)
+    return blocks.reshape(F * B, fb + 2 * ov, frames.shape[2])
+
+
+def merge_blocks(bits: jax.Array, block_frames: int) -> jax.Array:
+    """(F*B, fb) per-block kept bits -> (F, f) frame bits. The trailing
+    overlap was already truncated by the per-block decode (a block keeps
+    only its fb body stages), so the merge is a pure reshape."""
+    FB, fb = bits.shape
+    return bits.reshape(FB // int(block_frames), int(block_frames) * fb)
 
 
 @partial(jax.jit, static_argnums=(1, 2, 3))

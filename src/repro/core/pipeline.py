@@ -47,6 +47,17 @@ class DecoderConfig:
     behavior and what the Pallas kernels always do; N>1 amortizes the max
     reduction over N stages, 0 disables it (reference backend only, for
     the renormalization bit-identity gate in tests/test_faults.py).
+
+    ``block_frames``/``overlap`` engage the intra-frame block-parallel
+    decode (kernels/block.py): each frame's f kept stages split into
+    block_frames blocks of f/block_frames stages carrying an
+    overlap-stage training/truncation region on each side, decoded in
+    parallel and merged by truncation. ``"auto"`` engages blocking only
+    past BLOCK_LEN_THRESHOLD kept stages; ``overlap=None`` takes the
+    ~5*constraint-length default. The second knob besides bf16 that is
+    not bit-exact (truncated-traceback approximation, BER-gated to 1e-3
+    in tests/test_block.py) — applied by ALL backends, reference
+    included, so kernel-vs-reference stays bit-identical under blocking.
     """
     trellis: Trellis = STD_K7
     spec: FrameSpec = FrameSpec()
@@ -59,6 +70,8 @@ class DecoderConfig:
     layout: str = "lane"           # 'lane' | 'sublane' survivor layout
     bm_dtype: str = "float32"      # 'float32' | 'bfloat16' branch metrics
     renorm_every: int = 1          # path-metric renormalization period
+    block_frames: int | str = 1    # intra-frame blocks per frame, or 'auto'
+    overlap: int | None = None     # block training/truncation stages
 
     def __post_init__(self):
         if self.rate != "1/2":
@@ -78,16 +91,47 @@ class DecoderConfig:
             raise ValueError(
                 "renorm_every != 1 requires backend='reference' (the "
                 "Pallas kernels renormalize every stage unconditionally)")
+        if not (self.block_frames == "auto"
+                or (isinstance(self.block_frames, int)
+                    and self.block_frames >= 1)):
+            raise ValueError(
+                f"block_frames must be 'auto' or an int >= 1, "
+                f"got {self.block_frames!r}")
+        if self.overlap is not None and self.overlap < 0:
+            raise ValueError(f"overlap must be >= 0, got {self.overlap}")
+        if (self.block_frames not in (1, "auto")
+                or self.overlap is not None):
+            # explicit knobs: fail at config time with the geometry error,
+            # not at first decode (``"auto"`` self-limits to valid splits)
+            from ..kernels.block import resolve_block
+            resolve_block(self.trellis, self.spec, self.block_frames,
+                          self.overlap)
 
 
 def _build_frame_decoder(cfg: DecoderConfig):
     """Build the backend-dispatch closure (uncached — see
     make_frame_decoder / serve.plan_cache for the shared entry point)."""
+    from ..kernels.block import merge_blocks, reframe_blocks, resolve_block
+    bf, ov = resolve_block(cfg.trellis, cfg.spec, cfg.block_frames,
+                           cfg.overlap)
     if cfg.backend == "reference":
-        def decode_frames(frames):
-            return jax.vmap(
-                lambda fr: decode_frame(fr, cfg.trellis, cfg.spec,
-                                        cfg.renorm_every))(frames)
+        if bf > 1:
+            # the reference path applies the SAME block decomposition as
+            # the kernels so kernel-vs-reference stays bit-identical (and
+            # serve degrade/failover to reference is decode-equivalent)
+            sub = cfg.spec.blocked(bf, ov)
+
+            def decode_frames(frames):
+                blocks = reframe_blocks(frames, cfg.spec, bf, ov)
+                bits = jax.vmap(
+                    lambda fr: decode_frame(fr, cfg.trellis, sub,
+                                            cfg.renorm_every))(blocks)
+                return merge_blocks(bits, bf)
+        else:
+            def decode_frames(frames):
+                return jax.vmap(
+                    lambda fr: decode_frame(fr, cfg.trellis, cfg.spec,
+                                            cfg.renorm_every))(frames)
     elif cfg.backend in ("kernel", "kernel_split"):
         from ..kernels import ops as kops
         unified = cfg.backend == "kernel"
@@ -98,6 +142,7 @@ def _build_frame_decoder(cfg: DecoderConfig):
                 frames_per_tile=cfg.frames_per_tile,
                 pack_survivors=cfg.pack_survivors, radix=cfg.radix,
                 layout=cfg.layout, bm_dtype=cfg.bm_dtype,
+                block_frames=bf, overlap=ov,
                 interpret=cfg.interpret)
     else:
         raise ValueError(cfg.backend)

@@ -11,7 +11,7 @@ the module __getattr__ below resolves them on demand.
 """
 import importlib
 
-_SUBMODULES = ("acs", "autotune", "ops", "packing", "ref", "tables",
+_SUBMODULES = ("acs", "autotune", "block", "ops", "packing", "ref", "tables",
                "viterbi_fwd", "viterbi_unified")
 
 

@@ -39,6 +39,7 @@ import math
 from ..core.framed import FrameSpec
 from ..core.trellis import Trellis
 from ..obs.tracer import get_tracer
+from .block import resolve_block
 from .packing import Layout, packed_width
 
 __all__ = ["TilePlan", "DecodePlan", "mosaic_padded_bytes",
@@ -270,12 +271,19 @@ def plan_tiles(trellis: Trellis, spec: FrameSpec, *,
 @dataclasses.dataclass(frozen=True)
 class DecodePlan:
     """The full configuration the decode front-end executes: kernel knobs
-    (tile) plus the streaming geometry (chunk sizing across devices)."""
+    (tile) plus the streaming geometry (chunk sizing across devices).
+    ``block_frames``/``overlap`` are the intra-frame block-parallel knobs
+    (kernels/block.py), always stored RESOLVED (1/0 = blocking off); when
+    on, ``tile`` is budgeted against the derived per-block spec — the
+    short frames the kernel actually sees — and ``frames_per_tile``
+    counts those blocks, not outer frames."""
     tile: TilePlan
     pack_survivors: bool
     radix: int
     chunk_frames: int         # frames the stream front-end batches per chunk
     num_devices: int          # chunk_frames is a multiple of tiles x devices
+    block_frames: int = 1     # intra-frame blocks per frame (1 = off)
+    overlap: int = 0          # per-block training/truncation stages
 
     @property
     def unified(self) -> bool:
@@ -291,17 +299,20 @@ class DecodePlan:
                     frames_per_tile=self.tile.frames_per_tile,
                     pack_survivors=self.pack_survivors, radix=self.radix,
                     layout=self.tile.layout.value,
-                    bm_dtype=self.tile.bm_dtype)
+                    bm_dtype=self.tile.bm_dtype,
+                    block_frames=self.block_frames, overlap=self.overlap)
 
     def cache_key(self) -> tuple:
         """Stable, hashable identity of the full plan: everything that
-        changes the compiled decode (kernel knobs) or the launch geometry
-        (chunk sizing across devices). Together with (trellis, spec,
-        nframes) this keys the compiled-plan cache and the serve layer's
-        session buckets."""
+        changes the compiled decode (kernel knobs — including the block
+        decomposition, which changes the decoded BITS) or the launch
+        geometry (chunk sizing across devices). Together with (trellis,
+        spec, nframes) this keys the compiled-plan cache and the serve
+        layer's session buckets."""
         return (*self.tile.cache_key(), bool(self.pack_survivors),
                 int(self.radix), int(self.chunk_frames),
-                int(self.num_devices))
+                int(self.num_devices), int(self.block_frames),
+                int(self.overlap))
 
     def fingerprint(self) -> str:
         """Short hex digest of cache_key() — a human-greppable bucket id
@@ -316,7 +327,9 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
                 vmem_budget: int = DEFAULT_VMEM_BUDGET, num_devices: int = 1,
                 chunk_frames: int | None = None,
                 max_frames: int | None = None,
-                frames_per_tile: int | None = None) -> DecodePlan:
+                frames_per_tile: int | None = None,
+                block_frames: int | str = 1,
+                overlap: int | None = None) -> DecodePlan:
     """Plan the whole decode: kernel, layout, tile, and chunk geometry.
 
     ``layout='auto'`` evaluates both layouts under mosaic (hardware-padded)
@@ -329,43 +342,62 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
     layer passes a session's explicit knob through here so the plan — and
     its padding accounting — matches the kernel that actually launches).
 
+    ``block_frames``/``overlap`` are the intra-frame block-parallel knobs
+    (kernels/block.py): an int, or ``"auto"`` to engage blocking past
+    BLOCK_LEN_THRESHOLD kept stages. When blocking is on, the tile is
+    budgeted against the DERIVED per-block spec — the planner trades
+    frames-per-tile against blocks-per-frame under the same VMEM model,
+    so a long frame that only fits a handful of sequential scans per tile
+    becomes many short blocks that fill the tile instead. Tile counts and
+    ``frames_per_tile`` are then in block units; ``chunk_frames`` stays in
+    OUTER frames (what core/stream.py slices), defaulting to two tiles'
+    worth of whole frames per device.
+
     Every call runs under a ``plan_decode`` tracing span whose attributes
-    carry the chosen plan (kernel, layout, tile, chunk geometry) and the
-    predicted VMEM footprint vs budget — the trace file records *why* the
-    launch geometry is what it is.
+    carry the chosen plan (kernel, layout, tile, chunk geometry, block
+    decomposition) and the predicted VMEM footprint vs budget — the trace
+    file records *why* the launch geometry is what it is.
     """
     with get_tracer().span("plan_decode") as sp:
+        spec.validate()
+        bf, ov = resolve_block(trellis, spec, block_frames, overlap)
+        plan_spec = spec.blocked(bf, ov) if bf > 1 else spec
+        eff_max = (max_frames * bf if (max_frames is not None and bf > 1)
+                   else max_frames)
         if frames_per_tile is not None:
-            spec.validate()
             lay, mosaic = _resolve(
                 Layout.SUBLANE if layout == "auto" else layout, None)
             model = unified_vmem_bytes if unified else split_vmem_bytes
             total, breakdown = model(
-                trellis, spec, frames_per_tile, pack_survivors=pack_survivors,
-                radix=radix, layout=lay, bm_dtype=bm_dtype, mosaic=mosaic)
+                trellis, plan_spec, frames_per_tile,
+                pack_survivors=pack_survivors, radix=radix, layout=lay,
+                bm_dtype=bm_dtype, mosaic=mosaic)
             tile = TilePlan(int(frames_per_tile), total, breakdown,
                             vmem_budget, "unified" if unified else "split",
                             lay, str(bm_dtype), mosaic)
         elif layout == "auto":
-            plans = [plan_tiles(trellis, spec, pack_survivors=pack_survivors,
+            plans = [plan_tiles(trellis, plan_spec,
+                                pack_survivors=pack_survivors,
                                 radix=radix, vmem_budget=vmem_budget,
-                                max_frames=max_frames, unified=unified,
+                                max_frames=eff_max, unified=unified,
                                 layout=lay, bm_dtype=bm_dtype, mosaic=True)
                      for lay in (Layout.LANE, Layout.SUBLANE)]
             tile = max(plans, key=lambda p: (p.frames_per_tile, -p.vmem_bytes))
         else:
-            tile = plan_tiles(trellis, spec, pack_survivors=pack_survivors,
+            tile = plan_tiles(trellis, plan_spec,
+                              pack_survivors=pack_survivors,
                               radix=radix, vmem_budget=vmem_budget,
-                              max_frames=max_frames, unified=unified,
+                              max_frames=eff_max, unified=unified,
                               layout=layout, bm_dtype=bm_dtype)
         if chunk_frames is None:
-            chunk_frames = 2 * tile.frames_per_tile * num_devices
+            chunk_frames = 2 * max(1, tile.frames_per_tile // bf) * num_devices
         plan = DecodePlan(tile, pack_survivors, radix, chunk_frames,
-                          num_devices)
+                          num_devices, bf, ov)
         sp.set(kernel=tile.kernel, layout=Layout(tile.layout).value,
                frames_per_tile=tile.frames_per_tile,
                bm_dtype=str(tile.bm_dtype), chunk_frames=int(chunk_frames),
-               num_devices=int(num_devices), vmem_bytes=tile.vmem_bytes,
+               num_devices=int(num_devices), block_frames=int(bf),
+               overlap=int(ov), vmem_bytes=tile.vmem_bytes,
                vmem_budget=tile.budget,
                fits=tile.vmem_bytes <= tile.budget,
                fingerprint=plan.fingerprint())

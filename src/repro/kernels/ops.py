@@ -18,7 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core.framed import FrameSpec
+from ..core.framed import FrameSpec, merge_blocks, reframe_blocks
 from ..core.traceback import parallel_traceback_frames, serial_traceback_frames
 from ..core.trellis import Trellis
 from ..obs.tracer import get_tracer
@@ -41,12 +41,13 @@ def _pad_frames(frames: jax.Array, tile: int):
 @partial(jax.jit, static_argnames=("trellis", "spec", "unified",
                                    "frames_per_tile", "pack_survivors",
                                    "radix", "layout", "bm_dtype",
-                                   "interpret"))
+                                   "block_frames", "overlap", "interpret"))
 def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
                           spec: FrameSpec, *, unified: bool = True,
                           frames_per_tile: int | str = "auto",
                           pack_survivors: bool = True, radix: int = 4,
                           layout: str = "lane", bm_dtype: str = "float32",
+                          block_frames: int = 1, overlap: int = 0,
                           interpret: bool = True) -> jax.Array:
     """(F, L, beta) LLR frames -> (F, f) decoded bits.
 
@@ -66,6 +67,17 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
     bm_dtype      : 'float32' | 'bfloat16' branch-metric storage. All knob
                     combinations decode bit-identically except bf16, which
                     quantizes the metrics once (BER-neutral to ~1e-3).
+    block_frames  : >1 engages intra-frame block-parallel decode
+                    (kernels/block.py): each frame re-framed into
+                    block_frames blocks of f/B + 2*overlap stages on the
+                    frame axis, decoded by this same kernel under the
+                    derived spec, merged by truncating each block's
+                    overlap. The second knob besides bf16 that is not
+                    bit-exact: a truncated-traceback approximation,
+                    BER-gated to 1e-3 at overlap ~5*K, and exactly
+                    bit-identical when overlap >= block.full_overlap().
+    overlap       : per-block training/truncation region (stages); only
+                    meaningful with block_frames > 1.
     """
     spec.validate()
     # entry validation (trace-time, so invalid calls fail with a clear
@@ -86,6 +98,17 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
         raise ValueError(
             f"frames must be floating-point LLRs, got dtype "
             f"{frames.dtype}")
+    F_in = frames.shape[0]
+    if block_frames < 1:
+        raise ValueError(f"block_frames must be >= 1, got {block_frames}")
+    if block_frames > 1:
+        # intra-frame block-parallel mode: re-frame (F, L) frames into
+        # (F*B, f/B + 2*overlap) blocks on the same frame axis and decode
+        # them below under the derived spec — the tile planner, padding,
+        # kernels and traceback all see ordinary (short) frames
+        sub = spec.blocked(block_frames, overlap)
+        frames = reframe_blocks(frames, spec, block_frames, overlap)
+        spec = sub
     lay = Layout(layout)
     if frames_per_tile == "auto":
         frames_per_tile = plan_tiles(
@@ -108,6 +131,7 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
                 frames_per_tile=int(frames_per_tile), layout=lay.value,
                 bm_dtype=str(bm_dtype), radix=int(radix),
                 pack_survivors=bool(pack_survivors),
+                block_frames=int(block_frames), overlap=int(overlap),
                 interpret=bool(interpret))
     trace.count("kernel_traces")
 
@@ -118,21 +142,28 @@ def viterbi_decode_frames(frames: jax.Array, trellis: Trellis,
             f0=f0, v2s=v2s, start=start, frames_per_tile=frames_per_tile,
             pack_survivors=pack_survivors, radix=radix, layout=lay.value,
             bm_dtype=bm_dtype, interpret=interpret)
-        return bits[:F]
-
-    sel, amax = forward_frames(padded, trellis=trellis,
-                               frames_per_tile=frames_per_tile,
-                               pack_survivors=pack_survivors, radix=radix,
-                               layout=lay.value, bm_dtype=bm_dtype,
-                               interpret=interpret)
-    # HBM round-trip; the sublane stream keeps frames on the trailing axis
-    if lay is Layout.SUBLANE:
-        sel, amax = sel[..., :F], amax[:F]
+        bits = bits[:F]
     else:
-        sel, amax = sel[:F], amax[:F]
-    if spec.parallel_tb:
-        return parallel_traceback_frames(
-            sel, amax, trellis, spec.v1, spec.f, spec.f0, spec.v2s,
-            spec.start, packed=pack_survivors, layout=lay)
-    return serial_traceback_frames(sel, amax, trellis, spec.v1, spec.f,
-                                   packed=pack_survivors, layout=lay)
+        sel, amax = forward_frames(padded, trellis=trellis,
+                                   frames_per_tile=frames_per_tile,
+                                   pack_survivors=pack_survivors, radix=radix,
+                                   layout=lay.value, bm_dtype=bm_dtype,
+                                   interpret=interpret)
+        # HBM round-trip; the sublane stream keeps frames on the trailing
+        # axis
+        if lay is Layout.SUBLANE:
+            sel, amax = sel[..., :F], amax[:F]
+        else:
+            sel, amax = sel[:F], amax[:F]
+        if spec.parallel_tb:
+            bits = parallel_traceback_frames(
+                sel, amax, trellis, spec.v1, spec.f, spec.f0, spec.v2s,
+                spec.start, packed=pack_survivors, layout=lay)
+        else:
+            bits = serial_traceback_frames(sel, amax, trellis, spec.v1,
+                                           spec.f, packed=pack_survivors,
+                                           layout=lay)
+    if block_frames > 1:
+        bits = merge_blocks(bits, block_frames)       # (F_in, f)
+        assert bits.shape[0] == F_in
+    return bits

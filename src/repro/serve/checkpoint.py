@@ -73,7 +73,8 @@ class CheckpointError(ServeError):
 #: DecoderConfig's plain (JSON-native) fields; trellis and spec are
 #: handled structurally.
 _CFG_FIELDS = ("rate", "backend", "interpret", "pack_survivors", "radix",
-               "frames_per_tile", "layout", "bm_dtype", "renorm_every")
+               "frames_per_tile", "layout", "bm_dtype", "renorm_every",
+               "block_frames", "overlap")
 
 
 def encode_cfg(cfg: DecoderConfig) -> dict:
@@ -90,8 +91,10 @@ def decode_cfg(data: dict) -> DecoderConfig:
     trellis = make_trellis(int(data["trellis"]["k"]),
                            tuple(int(p) for p in data["trellis"]["polys"]))
     spec = FrameSpec(**data["spec"])
+    # fields absent from older checkpoints take the dataclass default
+    # (e.g. block_frames/overlap on pre-block-mode files)
     return DecoderConfig(trellis=trellis, spec=spec,
-                         **{f: data[f] for f in _CFG_FIELDS})
+                         **{f: data[f] for f in _CFG_FIELDS if f in data})
 
 
 # -- binary payload helpers ------------------------------------------------

@@ -126,7 +126,8 @@ def bucket_plan(cfg: DecoderConfig, num_devices: int = 1,
         cfg.trellis, cfg.spec, unified=cfg.backend != "kernel_split",
         pack_survivors=cfg.pack_survivors, radix=cfg.radix,
         bm_dtype=cfg.bm_dtype, layout=cfg.layout, num_devices=num_devices,
-        chunk_frames=chunk_frames, frames_per_tile=pinned)
+        chunk_frames=chunk_frames, frames_per_tile=pinned,
+        block_frames=cfg.block_frames, overlap=cfg.overlap)
 
 
 @dataclasses.dataclass
@@ -228,11 +229,16 @@ class Bucket:
     def tile_pad(self, batch_frames: int) -> int:
         """Frames of tile padding a launch of ``batch_frames`` pays: the
         kernel wrappers round the frame axis up to the plan's tile
-        (ops._pad_frames); the reference backend vmaps exactly."""
+        (ops._pad_frames); the reference backend vmaps exactly. Under a
+        block-parallel plan the kernel's frame axis carries BLOCKS
+        (batch_frames * block_frames of them), so the rounding happens in
+        block units and the result is converted back to outer frames."""
         if self.decode_cfg.backend == "reference":
             return 0
+        bf = self.plan.block_frames
+        units = batch_frames * bf
         ft = self.plan.frames_per_tile
-        return -(-batch_frames // ft) * ft - batch_frames
+        return (-(-units // ft) * ft - units) // bf
 
     def take(self, max_windows: int) -> list[PendingWindow]:
         out = []

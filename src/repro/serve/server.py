@@ -275,18 +275,31 @@ class DecodeServer:
         return len(self._sessions)
 
     def open_session(self, cfg: DecoderConfig,
-                     chunk_frames: int | None = None) -> int:
+                     chunk_frames: int | None = None, *,
+                     low_latency: bool = False) -> int:
         """Admit one tenant; returns its session id. Sessions of the same
         (trellis, spec, plan) — any puncture rate — share a bucket. A
         bucket whose circuit breaker is not closed admits new sessions
         straight onto its failover bucket (no tenant is placed on a
-        known-bad device); a draining server refuses admission."""
+        known-bad device); a draining server refuses admission.
+
+        ``low_latency=True`` is the latency-SLO option: it sets
+        ``block_frames='auto'`` on the session's config (unless the
+        tenant already chose a block decomposition), so long frames are
+        decoded as many short intra-frame blocks — each kernel launch
+        scans f/block_frames + 2*overlap stages instead of v1+f+v2,
+        shrinking per-window launch latency at the truncated-traceback
+        BER cost documented on DecoderConfig. The plan's cache_key
+        carries the resolved knobs, so low-latency sessions bucket
+        separately from exact ones automatically."""
         if self._draining:
             raise Draining("open_session")
         if len(self._sessions) >= self.max_sessions:
             raise ServerFull(
                 f"{len(self._sessions)} live sessions (max_sessions="
                 f"{self.max_sessions}); close one or raise the limit")
+        if low_latency and cfg.block_frames == 1:
+            cfg = dataclasses.replace(cfg, block_frames="auto")
         return self._admit(cfg, chunk_frames)
 
     def _bucket_for(self, cfg: DecoderConfig,

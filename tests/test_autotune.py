@@ -217,3 +217,68 @@ def test_geometry_validation_errors():
     with pytest.raises(ValueError, match="exceeds v2"):
         plan_tiles(STD_K7, FrameSpec(f=256, v1=20, v2=20, f0=32, v2s=45))
     plan_tiles(STD_K7, SPEC)                     # sane spec passes
+
+
+def test_plan_identity_differs_for_every_knob():
+    """Property: cache_key()/fingerprint() are injective over the knobs —
+    any single-knob change (including the block decomposition) yields a
+    distinct identity, so the plan cache and serve buckets can never
+    alias two plans that compile or decode differently."""
+    import dataclasses
+    base = plan_decode(STD_K7, SPEC, layout="sublane")
+    variants = [
+        ("frames_per_tile",
+         dataclasses.replace(base, tile=dataclasses.replace(
+             base.tile, frames_per_tile=base.tile.frames_per_tile * 2))),
+        ("kernel", dataclasses.replace(base, tile=dataclasses.replace(
+            base.tile, kernel="split"))),
+        ("layout", dataclasses.replace(base, tile=dataclasses.replace(
+            base.tile, layout=Layout.LANE))),
+        ("bm_dtype", dataclasses.replace(base, tile=dataclasses.replace(
+            base.tile, bm_dtype="bfloat16"))),
+        ("pack_survivors", dataclasses.replace(base, pack_survivors=False)),
+        ("radix", dataclasses.replace(base, radix=2)),
+        ("chunk_frames",
+         dataclasses.replace(base, chunk_frames=base.chunk_frames + 1)),
+        ("num_devices", dataclasses.replace(base, num_devices=2)),
+        ("block_frames", dataclasses.replace(base, block_frames=4,
+                                             overlap=16)),
+        ("overlap", dataclasses.replace(base, block_frames=4, overlap=20)),
+    ]
+    plans = [("base", base)] + variants
+    keys = {}
+    for name, plan in plans:
+        key, fp = plan.cache_key(), plan.fingerprint()
+        for other, (okey, ofp) in keys.items():
+            assert key != okey, f"{name} aliases {other} in cache_key()"
+            assert fp != ofp, f"{name} aliases {other} in fingerprint()"
+        keys[name] = (key, fp)
+    # footprint BOOKKEEPING is deliberately NOT identity: two plans that
+    # picked the same knobs compile to the same kernel
+    relabeled = dataclasses.replace(base, tile=dataclasses.replace(
+        base.tile, vmem_bytes=base.tile.vmem_bytes + 1))
+    assert relabeled.cache_key() == base.cache_key()
+    assert relabeled.fingerprint() == base.fingerprint()
+
+
+def test_fingerprint_stable_across_processes():
+    """fingerprint() must be reproducible in a FRESH interpreter: the
+    serve checkpoint stores it and a restored server recomputes it, so a
+    hash seeded per-process (e.g. str hashing) would break every restore.
+    Also pins the blocked-plan identity so a knob silently dropped from
+    cache_key() fails loudly."""
+    import subprocess
+    import sys
+    prog = (
+        "from repro.core import FrameSpec, STD_K7\n"
+        "from repro.kernels.autotune import plan_decode\n"
+        "spec = FrameSpec(f=256, v1=20, v2=45, f0=32, v2s=45)\n"
+        "p = plan_decode(STD_K7, spec, layout='sublane',\n"
+        "                block_frames=4, overlap=45)\n"
+        "print(p.fingerprint())\n")
+    here = plan_decode(STD_K7, SPEC, layout="sublane",
+                       block_frames=4, overlap=45)
+    assert here.block_frames == 4 and here.overlap == 45
+    out = subprocess.run([sys.executable, "-c", prog], check=True,
+                         capture_output=True, text=True, env=None)
+    assert out.stdout.strip() == here.fingerprint()
