@@ -8,6 +8,7 @@ The TPU-side absolute projection comes from the §Roofline analysis instead.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -17,6 +18,23 @@ import jax.numpy as jnp
 from repro.core import FrameSpec, STD_K7, framed_decode
 from repro.core.framed import frame_llr
 from repro.kernels import ops
+
+#: Compiled-mode switch (``--compiled`` / bench_gate's BENCH_COMPILED):
+#: False runs the Pallas kernels under the interpreter (the only option
+#: on CPU), True compiles them for the real backend — the sections
+#: themselves are identical, only ``interpret=`` changes, and the
+#: platform stamp on the recorded run keeps the two trajectories apart.
+COMPILED = False
+
+
+def set_compiled(on: bool = True) -> None:
+    global COMPILED
+    COMPILED = bool(on)
+
+
+def _interpret() -> bool:
+    """interpret= for every kernel launch in this module."""
+    return not COMPILED
 
 
 def _time(fn, *args, reps=3):
@@ -77,7 +95,7 @@ def unified_vs_split(n=80_000):
     rows = []
     for unified in (True, False):
         fn = jax.jit(lambda fr: ops.viterbi_decode_frames(
-            fr, STD_K7, spec, unified=unified, interpret=True))
+            fr, STD_K7, spec, unified=unified, interpret=_interpret()))
         dt = _time(fn, frames, reps=1)
         rows.append({"table": "I", "variant": "unified" if unified else "split",
                      "us_per_call": dt * 1e6, "mbps": n / dt / 1e6})
@@ -119,7 +137,7 @@ def kernel_sweep(full: bool = False):
                      bd=bm_dtype: ops.viterbi_decode_frames(
                          fr, STD_K7, spec, frames_per_tile=t,
                          pack_survivors=p, radix=r, layout=lay, bm_dtype=bd,
-                         interpret=True))
+                         interpret=_interpret()))
         dt = _time_best(fn, frames, reps=3)
         ft_res = (plan_tiles(STD_K7, spec, pack_survivors=pack, radix=radix,
                              layout=layout, bm_dtype=bm_dtype,
@@ -420,7 +438,7 @@ def block_bench(full: bool = False):
     for variant, B, o in (("sequential", 1, 0), ("blocked", bf, ov)):
         fn = jax.jit(lambda fr, B=B, o=o: ops.viterbi_decode_frames(
             fr, STD_K7, spec, frames_per_tile="auto", layout="sublane",
-            block_frames=B, overlap=o, interpret=True))
+            block_frames=B, overlap=o, interpret=_interpret()))
         dt = _time_best(fn, frames, reps=2)
         mbps = n / dt / 1e6
         by_variant[variant] = mbps
@@ -428,10 +446,103 @@ def block_bench(full: bool = False):
                      "block_frames": B, "overlap": o, "n_bits": n,
                      "reps": 2, "us_per_call": dt * 1e6, "mbps": mbps})
     ratio = by_variant["blocked"] / by_variant["sequential"]
-    assert ratio >= 1.5, (
-        f"acceptance criterion failed: block-parallel decode is only "
-        f"{ratio:.2f}x the sequential-scan plan at f={spec.f} (needs "
-        f">= 1.5x at equal VMEM budget)")
+    if not COMPILED:
+        # the interpret-mode win comes from tile fill; on real hardware
+        # the blocked-vs-sequential trade-off is exactly what the compiled
+        # trajectory exists to MEASURE (ROADMAP item 1 follow-on), so the
+        # ratio is recorded there, not asserted
+        assert ratio >= 1.5, (
+            f"acceptance criterion failed: block-parallel decode is only "
+            f"{ratio:.2f}x the sequential-scan plan at f={spec.f} (needs "
+            f">= 1.5x at equal VMEM budget)")
+    return rows
+
+
+#: Offered-load levels of the serve_load section. Fixed: the regression
+#: gate compares stored p99s per level, so the levels are part of the
+#: trajectory contract (ROADMAP item 4's "p99 vs offered load at
+#: 64/256/1024 sessions").
+LOAD_LEVELS = (64, 256, 1024)
+
+
+def serve_load_sweep(full: bool = False):
+    """Tail-latency-under-load SLO curves (the 'serve_load' section).
+
+    One code config, ``LOAD_LEVELS`` sessions each pushing one C-frame
+    chunk per round against a fixed-capacity server (16 slots), so rising
+    session count IS rising offered load: at 64 sessions a round drains
+    in 4 launches, at 1024 it takes 64 and late windows queue behind
+    early ones. Each level records p50/p99 queue-wait (the PR 7
+    ``queue_wait_ms`` stage histogram — time from push to batch-pack) and
+    p50/p99 end-to-end window latency (push to materialized bits) from a
+    fresh server per rep; of ``reps`` runs the one with the LOWEST p99 is
+    kept — the min-of-reps discipline applied to a latency metric, since
+    scheduler stalls on a shared runner only ever inflate the tail. The
+    plan cache is shared across levels and reps (the batch shape
+    ``slots x C`` frames never changes), so rep 1 is the only compile.
+
+    The regression gate enforces these rows INVERTED vs the throughput
+    sections: p99 above (1 + tol) x the best stored comparable p99
+    fails the gate.
+    """
+    from repro.core import DecoderConfig
+    from repro.serve import DecodeServer, PlanCache
+
+    C = 2                                      # chunk frames per push
+    spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+    cfg = DecoderConfig(spec=spec)
+    rounds = 4 if full else 2
+    reps = 2
+    slots = 16
+    cache = PlanCache()
+    rng = np.random.default_rng(0)
+    chunk = rng.standard_normal((C * spec.f, 2)).astype(np.float32)
+
+    rows = []
+    for nsess in LOAD_LEVELS:
+        total_bits = nsess * rounds * C * spec.f
+
+        def run(nsess=nsess):
+            srv = DecodeServer(slots=slots, max_sessions=nsess,
+                               cache=cache)
+            sids = [srv.open_session(cfg, chunk_frames=C)
+                    for _ in range(nsess)]
+            got = 0
+            for _ in range(rounds):
+                for sid in sids:
+                    srv.push(sid, chunk)
+                while srv.step():
+                    pass
+                for sid in sids:
+                    got += srv.poll(sid).size
+            for sid in sids:
+                got += srv.close_session(sid).size
+            return got, srv
+
+        nbits, _ = run()                       # warm the shared plan cache
+        assert nbits == total_bits
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            nbits, srv = run()
+            dt = time.perf_counter() - t0
+            assert nbits == total_bits
+            tot = srv.metrics.totals()
+            if best is None or tot["p99_ms"] < best[0]:
+                qw = srv.metrics.stage("queue_wait_ms")
+                best = (tot["p99_ms"], dt, tot,
+                        (qw.percentile(50), qw.percentile(99)))
+        _, dt, tot, (q50, q99) = best
+        rows.append({"table": "serve_load", "variant": f"sessions{nsess}",
+                     "sessions": nsess, "slots": slots, "chunk_frames": C,
+                     "rounds": rounds, "n_bits": total_bits, "reps": reps,
+                     "mbps": total_bits / dt / 1e6,
+                     "queue_p50_ms": round(q50, 3),
+                     "queue_p99_ms": round(q99, 3),
+                     "p50_ms": round(tot["p50_ms"], 3),
+                     "p99_ms": round(tot["p99_ms"], 3),
+                     "launches": tot["launches"],
+                     "occupancy": round(tot["occupancy"], 4)})
     return rows
 
 
@@ -474,6 +585,7 @@ SECTIONS = {
     "streaming": streaming_bench,
     "serve": serve_bench,
     "serve_faults": serve_faults_bench,
+    "serve_load": serve_load_sweep,
     "plans": lambda full: plan_rows(),
     "block": block_bench,
 }
@@ -481,6 +593,12 @@ SECTIONS = {
 #: The historical default — what plain ``python benchmarks/throughput.py``
 #: has always printed (paper Tables IV/V + the Table I comparison).
 DEFAULT_SECTIONS = "table4,table5,unified_vs_split"
+
+#: What ``--compiled`` runs when ``--sections`` is not given: the
+#: trajectory sections whose compiled-mode numbers ROADMAP item 3 wants,
+#: i.e. the same sweep the interpret gate records — directly comparable
+#: modulo the platform stamp.
+COMPILED_SECTIONS = "kernels,streaming,serve,block"
 
 
 def main(full: bool = False, sections: str = DEFAULT_SECTIONS):
@@ -511,7 +629,16 @@ def _cli(argv=None):
                          "a Chrome trace-event JSON (each section runs as "
                          "one span; plan_decode/kernel_trace events show "
                          "what compiled)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="compile the Pallas kernels for the real backend "
+                         "instead of interpreting them (benchmarks/"
+                         "compiled.py sets the platform + XLA flags; "
+                         "BENCH_PLATFORM forces a backend). On a CPU-only "
+                         "machine this prints a notice and exits 0 — "
+                         "there is nothing honest to record")
     args = ap.parse_args(argv)
+    if args.compiled and args.sections == DEFAULT_SECTIONS:
+        args.sections = COMPILED_SECTIONS
     names = [s.strip() for s in args.sections.split(",") if s.strip()]
     unknown = [s for s in names if s not in SECTIONS]
     if unknown:
@@ -519,6 +646,20 @@ def _cli(argv=None):
                  f"{sorted(SECTIONS)}")
     if not names:
         ap.error("--sections selected nothing")
+    if args.compiled:
+        try:                       # script (benchmarks/ on path) or package
+            import compiled as _compiled
+        except ImportError:
+            from benchmarks import compiled as _compiled
+        backend = _compiled.set_platform(os.environ.get("BENCH_PLATFORM"))
+        if backend == "cpu":
+            print("compiled mode: no accelerator backend available — "
+                  "skipped (interpret-CPU numbers are the default run; "
+                  "a 'compiled' point here would really be the "
+                  "interpreter)")
+            return []
+        set_compiled(True)
+        print(f"compiled mode: backend {backend!r}")
     if not args.trace_out:
         return main(full=args.full, sections=",".join(names))
 

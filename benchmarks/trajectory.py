@@ -20,18 +20,18 @@ DEFAULT_PATH = "BENCH_kernels.json"
 
 __all__ = ["SCHEMA", "DEFAULT_PATH", "platform", "load_runs", "append_run",
            "best_mbps", "serve_mbps", "serve_under_faults_mbps",
-           "block_mbps"]
+           "block_mbps", "serve_load_p99"]
 
 
 def platform() -> dict:
     """The JAX backend/device identity of THIS process — stamped on every
     run so the regression gate never compares, say, an interpret-CPU
-    point against a compiled-TPU point (same code, ~100x apart). Lazy
-    import: loading the trajectory store must not initialize JAX."""
-    import jax
-    return {"backend": jax.default_backend(),
-            "device_kind": jax.devices()[0].device_kind,
-            "jax_version": jax.__version__}
+    point against a compiled-TPU point (same code, ~100x apart). The
+    same identity keys the measured-autotune DB (kernels/tunedb.py),
+    which owns the definition; both stay lazy — loading the trajectory
+    store must not initialize JAX."""
+    from repro.kernels.tunedb import platform_id
+    return platform_id()
 
 
 def load_runs(path: str = DEFAULT_PATH) -> list[dict]:
@@ -107,6 +107,17 @@ def serve_under_faults_mbps(run: dict) -> float:
     matching (sessions, n_bits) like the clean serve section."""
     return max((r["mbps"] for r in run.get("serve_faults", [])
                 if r.get("variant") == "server_faults"), default=0.0)
+
+
+def serve_load_p99(run: dict, sessions: int) -> float:
+    """End-to-end p99 window latency (ms) of a run's "serve_load" section
+    (throughput.serve_load_sweep) at one offered-load level — the SLO
+    curve datapoint the gate compares per level. 0.0 when the run
+    predates the load sweep or never ran that level. NOTE the inverted
+    gate semantics: lower is better, so the gate fails when the current
+    p99 EXCEEDS (1 + tol) x the best (minimum) stored comparable p99."""
+    return max((r["p99_ms"] for r in run.get("serve_load", [])
+                if r.get("sessions") == sessions), default=0.0)
 
 
 def block_mbps(run: dict, variant: str = "blocked") -> float:

@@ -20,7 +20,11 @@ health and fault counters the server recovered through.
 ``--trace-out trace.json`` records the whole run with the obs tracer and
 writes a Chrome trace-event file — open it in https://ui.perfetto.dev to
 see the nested push/launch/retire spans (and, under ``--chaos``, the
-retry/degrade recovery sub-spans) on a timeline.
+retry/degrade recovery sub-spans) on a timeline. ``--metrics-out PREFIX``
+writes the final ``metrics_snapshot()`` twice — ``PREFIX.prom``
+(Prometheus text exposition, including the stage-latency histogram
+series) and ``PREFIX.json`` — so one demo run leaves the complete
+observability artifact set (trace + scrape + snapshot).
 
 Durability (PR 8):
 
@@ -98,6 +102,12 @@ def main(argv=None):
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write a Chrome trace-event JSON of the run "
                          "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", metavar="PREFIX",
+                    help="write the final metrics_snapshot as PREFIX.prom "
+                         "(Prometheus text exposition, incl. the stage "
+                         "histograms) and PREFIX.json — with --trace-out "
+                         "this leaves the complete observability artifact "
+                         "set of a run")
     ap.add_argument("--block-frames", default=None, metavar="B|auto",
                     help="intra-frame block-parallel decode: split each "
                          "frame into B overlapped blocks ('auto' lets the "
@@ -291,6 +301,15 @@ def main(argv=None):
               f"{tot['quarantined']} quarantined — overall "
               f"health={tot['health']}")
         print("injector:", snap["faults"])
+    if args.metrics_out:
+        from repro.obs import prometheus_text, write_metrics_json
+        prom_path = args.metrics_out + ".prom"
+        json_path = args.metrics_out + ".json"
+        with open(prom_path, "w") as fh:
+            fh.write(prometheus_text(snap))
+        write_metrics_json(snap, json_path)
+        print(f"metrics: exposition -> {prom_path}, snapshot -> "
+              f"{json_path}")
     if tracer is not None:
         obj = write_chrome_trace(tracer, args.trace_out)
         set_tracer(None)

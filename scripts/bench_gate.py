@@ -1,17 +1,22 @@
 #!/usr/bin/env python
 """Benchmark-regression gate (scripts/ci.sh).
 
-Runs the interpret-mode kernel sweep + streaming bench + multi-tenant
-serve bench + serve-under-faults bench + block-parallel bench + tile-plan
-report, APPENDS the run to BENCH_kernels.json (keeping the per-PR
-trajectory), and fails when the best kernel configuration OR the serve
-aggregate throughput (clean or under fault injection) OR the block-
-parallel throughput regresses more than ``BENCH_GATE_TOL`` (default
-20%) against the best comparable run already stored. Runs are stamped
-with the producing platform (trajectory.platform) and only compared
-against stored runs of the SAME backend/device kind. Timing is
-min-of-reps, which absorbs most shared-runner noise; the tolerance
-absorbs the rest.
+Runs the kernel sweep + streaming bench + multi-tenant serve bench +
+serve-under-faults bench + block-parallel bench + serve load sweep +
+tile-plan report, APPENDS the run to BENCH_kernels.json (keeping the
+per-PR trajectory), and fails when the best kernel configuration OR the
+serve aggregate throughput (clean or under fault injection) OR the
+block-parallel throughput regresses more than ``BENCH_GATE_TOL``
+(default 20%) against the best comparable run already stored — or when
+any serve-load level's p99 latency rises more than the same tolerance
+above the best stored p99 (latency gates are inverted: up is bad). Runs
+are stamped with the producing platform (trajectory.platform) and only
+compared against stored runs of the SAME backend/device kind, so the
+interpret-CPU trajectory and any compiled-hardware trajectory gate
+independently in one store; ``BENCH_COMPILED=1`` runs the same sections
+with compiled kernels on the real backend (exit 0 + notice when the
+machine only has a CPU). Timing is min-of-reps, which absorbs most
+shared-runner noise; the tolerance absorbs the rest.
 
   PYTHONPATH=src python scripts/bench_gate.py
 
@@ -22,7 +27,8 @@ a real regression). A missing BENCH_kernels.json is NOT an error — the
 run is recorded as the first baseline.
 
 Env knobs: BENCH_GATE_TOL=0.2 (fractional regression allowed),
-BENCH_PATH=BENCH_kernels.json.
+BENCH_PATH=BENCH_kernels.json, BENCH_COMPILED=1 (compiled-mode gate),
+BENCH_PLATFORM=gpu|tpu (force the compiled backend).
 """
 from __future__ import annotations
 
@@ -98,10 +104,26 @@ def _run_platform(run: dict) -> dict:
     return {"backend": p.get("backend"), "device_kind": p.get("device_kind")}
 
 
+def comparable_runs(prior: list[dict], cur_plat: dict,
+                    n_bits: int) -> list[dict]:
+    """Stored runs the current run may be gated against: same quick (not
+    --full) workload with the same kernel-sweep n_bits, AND the same
+    platform (backend + device kind) — an interpret-CPU point must never
+    be compared to a compiled-GPU/TPU point of the same code (orders of
+    magnitude apart), so each platform's trajectory gates independently
+    inside one store. Runs without a platform stamp predate the stamp and
+    were all produced by interpret-CPU runs (_LEGACY_PLATFORM)."""
+    return [r for r in prior
+            if not r.get("full")
+            and _run_platform(r) == cur_plat
+            and all(row.get("n_bits") == n_bits
+                    for row in r.get("rows", []))]
+
+
 def main() -> int:
     from benchmarks.trajectory import (DEFAULT_PATH, append_run, best_mbps,
-                                       block_mbps, platform, serve_mbps,
-                                       serve_under_faults_mbps)
+                                       block_mbps, platform, serve_load_p99,
+                                       serve_mbps, serve_under_faults_mbps)
 
     tol = float(os.environ.get("BENCH_GATE_TOL", "0.2"))
     path = os.environ.get("BENCH_PATH", DEFAULT_PATH)
@@ -110,6 +132,20 @@ def main() -> int:
                                                # heavy imports and the
                                                # minutes-long benches run
     from benchmarks import throughput
+
+    if os.environ.get("BENCH_COMPILED"):
+        # compiled-mode gate: same sections, kernels compiled for the real
+        # backend; the platform stamp keeps this trajectory separate from
+        # the interpret-CPU one, so both gate independently in one store
+        from benchmarks import compiled
+        backend = compiled.set_platform(os.environ.get("BENCH_PLATFORM"))
+        if backend == "cpu":
+            print("bench gate: BENCH_COMPILED set but no accelerator is "
+                  "available — compiled gate skipped (the interpret-CPU "
+                  "gate is the default run)")
+            return 0
+        throughput.set_compiled(True)
+        print(f"bench gate: compiled mode on backend {backend!r}")
 
     section_s: dict[str, float] = {}
 
@@ -129,11 +165,13 @@ def main() -> int:
     faults_rows = timed("serve_faults",
                         lambda: throughput.serve_faults_bench(full=False))
     block_rows = timed("block", lambda: throughput.block_bench(full=False))
+    load_rows = timed("serve_load",
+                      lambda: throughput.serve_load_sweep(full=False))
     plans = timed("plans", throughput.plan_rows)
     run = {"full": False, "rows": rows, "streaming": stream_rows,
            "serve": serve_rows, "serve_faults": faults_rows,
-           "block": block_rows, "plans": plans, "section_s": section_s,
-           "gate": True}
+           "block": block_rows, "serve_load": load_rows, "plans": plans,
+           "section_s": section_s, "gate": True}
     if not rows:
         raise GateError("kernel_sweep returned no rows — nothing to gate")
     cur = best_mbps(run)
@@ -144,11 +182,7 @@ def main() -> int:
     # must never be gated against a compiled/TPU point — same code, orders
     # of magnitude apart (pre-stamp legacy runs were all interpret-CPU)
     cur_plat = _run_platform({"platform": platform()})
-    comparable = [r for r in prior
-                  if not r.get("full")
-                  and _run_platform(r) == cur_plat
-                  and all(row.get("n_bits") == n_bits
-                          for row in r.get("rows", []))]
+    comparable = comparable_runs(prior, cur_plat, n_bits)
     skipped_plat = sum(1 for r in prior if _run_platform(r) != cur_plat)
     if skipped_plat:
         print(f"bench gate: ignoring {skipped_plat} stored run(s) from a "
@@ -243,6 +277,33 @@ def main() -> int:
     else:
         print("bench gate: no comparable stored block baseline — "
               "recorded only")
+
+    # serve_load section: tail-latency-under-load SLO curves. INVERTED
+    # semantics vs every section above — p99 latency regresses UP, so each
+    # offered-load level fails when its p99 exceeds (1 + tol) x the best
+    # (minimum) stored comparable p99 at that level
+    lrows = _section(run, "serve_load")
+    print("bench gate: serve load sweep — "
+          + ", ".join(f"{r['sessions']} sess: p99 {r['p99_ms']:.1f} ms "
+                      f"(queue {r['queue_p99_ms']:.1f})" for r in lrows))
+    for lrow in lrows:
+        lvl, cur_p99 = lrow["sessions"], lrow["p99_ms"]
+        load_comp = [serve_load_p99(r, lvl) for r in comparable
+                     if any(row.get("sessions") == lvl
+                            and row.get("n_bits") == lrow["n_bits"]
+                            for row in r.get("serve_load", []))]
+        load_comp = [p for p in load_comp if p > 0]
+        if not load_comp:
+            print(f"bench gate: no stored serve-load baseline at {lvl} "
+                  f"sessions — recorded only")
+            continue
+        lbase = min(load_comp)
+        ceil = (1.0 + tol) * lbase
+        print(f"bench gate: stored serve-load p99 baseline at {lvl} "
+              f"sessions {lbase:.1f} ms (ceiling {ceil:.1f})")
+        if cur_p99 > ceil:
+            fail.append(f"serve p99 at {lvl} sessions regressed "
+                        f"{(cur_p99 / lbase - 1):.0%} (> {tol:.0%})")
 
     if not comparable:
         print("bench gate: no comparable stored baseline — recorded only")

@@ -15,6 +15,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# Observability artifacts (Perfetto traces, metrics expositions, the bench
+# run appended this CI pass) land here; the workflow uploads the directory
+# even on failure so a red run still ships its evidence.
+ARTIFACTS="${CI_ARTIFACTS:-/tmp/ci_artifacts}"
+mkdir -p "$ARTIFACTS"
+
 # ---- lint: a bare fori_loop/scan/while_loop at statement level discards
 # its carry — inside Pallas kernels the loop only survives because of ref-
 # write effects, and a DCE change would silently drop it (the radix-2
@@ -356,11 +362,16 @@ EOF
 # nested push/launch/launch_attempt/retire spans plus the retry/degrade
 # recovery markers, and (c) pairs every async begin with an end — i.e.
 # the trace a human would load into Perfetto is actually well-formed.
+# The same run writes the metrics exposition pair (.prom/.json), which
+# must parse as Prometheus text with true histogram series and as strict
+# JSON carrying the cumulative stage histograms.
 python examples/serve_viterbi.py --sessions 4 --chunks 3 --chaos \
-    --trace-out /tmp/obs_trace.json
-python - <<'EOF'
-import json
-obj = json.load(open("/tmp/obs_trace.json"))
+    --trace-out "$ARTIFACTS/obs_trace.json" \
+    --metrics-out "$ARTIFACTS/serve_metrics"
+python - "$ARTIFACTS" <<'EOF'
+import json, re, sys
+art = sys.argv[1]
+obj = json.load(open(art + "/obs_trace.json"))
 ev = obj["traceEvents"]
 names = {e["name"] for e in ev}
 for want in ("push", "launch", "launch_attempt", "retire", "retry",
@@ -375,7 +386,49 @@ assert b and sorted(b) == sorted(e_), (len(b), len(e_))
 assert obj["otherData"]["counters"]["plan_cache_misses"] > 0
 print(f"obs smoke: {len(ev)} events, {len(b)} async pairs, "
       f"spans {sorted(names - {'process_name'})}")
+
+# metrics exposition pair: every .prom line parses, the stage histograms
+# are present with cumulative buckets ending at +Inf, and the .json twin
+# is strict JSON with the same counts
+line_re = re.compile(
+    r'^(# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* (counter|gauge|histogram)'
+    r'|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z0-9_]+="[^"]*"'
+    r'(,[a-zA-Z0-9_]+="[^"]*")*\})? -?[0-9.e+-]+)$')
+prom = open(art + "/serve_metrics.prom").read()
+for line in prom.strip().split("\n"):
+    assert line_re.match(line), f"unparseable exposition line: {line!r}"
+assert "# TYPE repro_serve_stage_ms histogram" in prom
+assert 'repro_serve_stage_ms_bucket{le="+Inf",stage="launch_ms"}' in prom
+snap = json.load(open(art + "/serve_metrics.json"))
+hist = snap["stages_hist"]["launch_ms"]
+assert hist["buckets"][-1][0] == "+Inf"
+assert hist["buckets"][-1][1] == hist["count"] > 0
+print(f"obs smoke: exposition {len(prom.splitlines())} lines, "
+      f"{len(snap['stages_hist'])} stage histograms")
 print("OBS_SMOKE_OK")
 EOF
 
+# ---- compiled-mode smoke: the accelerator bench entry point must run
+# cleanly wherever CI lands. On a CPU-only runner it prints the skip
+# notice and exits 0; on a machine with a real backend it compiles and
+# runs the kernel sweep for real (interpret=False).
+python benchmarks/throughput.py --compiled --sections kernels \
+    | tee "$ARTIFACTS/compiled_smoke.txt"
+echo "COMPILED_SMOKE_OK"
+
 python scripts/bench_gate.py
+
+# ---- archive the trajectory delta: the run bench_gate just appended
+# (platform stamp, serve_load SLO rows and all) plus the full trajectory,
+# so a reviewer can diff perf without re-running the benches.
+python - "$ARTIFACTS" <<'EOF'
+import json, sys
+runs = json.load(open("BENCH_kernels.json"))["runs"]
+with open(sys.argv[1] + "/bench_last_run.json", "w") as fh:
+    json.dump(runs[-1], fh, indent=1, sort_keys=True)
+    fh.write("\n")
+print(f"archived run {len(runs)}/{len(runs)} of the trajectory "
+      f"(platform {runs[-1].get('platform', 'pre-stamp')})")
+EOF
+cp BENCH_kernels.json "$ARTIFACTS/BENCH_kernels.json"
+ls -l "$ARTIFACTS"

@@ -12,7 +12,7 @@ the module __getattr__ below resolves them on demand.
 import importlib
 
 _SUBMODULES = ("acs", "autotune", "block", "ops", "packing", "ref", "tables",
-               "viterbi_fwd", "viterbi_unified")
+               "tunedb", "viterbi_fwd", "viterbi_unified")
 
 
 def __getattr__(name):

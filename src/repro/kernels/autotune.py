@@ -41,11 +41,12 @@ from ..core.trellis import Trellis
 from ..obs.tracer import get_tracer
 from .block import resolve_block
 from .packing import Layout, packed_width
+from .tunedb import TUNE_DB, TuneDB, platform_id
 
 __all__ = ["TilePlan", "DecodePlan", "mosaic_padded_bytes",
            "unified_vmem_bytes", "split_vmem_bytes", "plan_tiles",
-           "plan_decode", "DEFAULT_VMEM_BUDGET", "CANDIDATE_TILES",
-           "MAX_FRAMES_PER_TILE"]
+           "plan_decode", "measure_plan", "DEFAULT_VMEM_BUDGET",
+           "CANDIDATE_TILES", "MAX_FRAMES_PER_TILE"]
 # (subframe-geometry validation lives on FrameSpec.validate itself)
 
 DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024          # bytes, per grid step
@@ -321,6 +322,111 @@ class DecodePlan:
         return hashlib.sha1(repr(self.cache_key()).encode()).hexdigest()[:10]
 
 
+def measure_plan(trellis: Trellis, spec: FrameSpec, plan: DecodePlan, *,
+                 reps: int = 2, frames: int | None = None,
+                 interpret: bool | None = None) -> dict:
+    """Time one DecodePlan with real launches of the kernel it selects.
+
+    One warm-up launch pays the compile, then ``reps`` timed launches keep
+    the minimum (the least-noisy estimator on a shared machine — same
+    discipline as benchmarks/throughput.py). The launch geometry is the
+    plan's own: ``frames`` defaults to ``plan.chunk_frames``, the chunk the
+    streaming front-end would actually feed this plan, so the record prices
+    padding and pipelining exactly as production launches would.
+
+    ``interpret`` defaults to True only on the CPU backend (Pallas kernels
+    need the interpreter there); on a real accelerator the launch is
+    compiled — that is the whole point of measuring.
+
+    Returns the tune-DB record: ``{ms, mbps, frames, reps, interpret,
+    fingerprint}``. Pure timing — callers decide whether to persist it
+    (``plan_decode(measure=True)`` does, via TuneDB).
+    """
+    import time as _time
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from . import ops            # lazy: ops imports this module at top level
+
+    if interpret is None:
+        interpret = platform_id()["backend"] == "cpu"
+    F = int(frames if frames is not None else plan.chunk_frames)
+    rng = np.random.default_rng(0)
+    llr = jnp.asarray(rng.standard_normal(
+        (F, spec.frame_len, trellis.beta)).astype(np.float32))
+    kw = plan.kernel_kwargs()
+
+    def launch():
+        return ops.viterbi_decode_frames(llr, trellis, spec,
+                                         interpret=bool(interpret), **kw)
+
+    launch().block_until_ready()             # compile + warm-up
+    best = math.inf
+    for _ in range(max(1, int(reps))):
+        t0 = _time.perf_counter()
+        launch().block_until_ready()
+        best = min(best, _time.perf_counter() - t0)
+    bits = F * spec.f
+    return {"ms": best * 1e3, "mbps": bits / best / 1e6, "frames": F,
+            "reps": int(reps), "interpret": bool(interpret),
+            "fingerprint": plan.fingerprint()}
+
+
+def _tile_at(trellis: Trellis, plan_spec: FrameSpec, ft: int, *,
+             unified: bool, pack_survivors: bool, radix: int, layout: Layout,
+             bm_dtype: str, mosaic: bool, vmem_budget: int) -> TilePlan:
+    """A TilePlan at an arbitrary tile size under the same accounting as
+    the analytic winner — candidate variants for the measuring pass."""
+    model = unified_vmem_bytes if unified else split_vmem_bytes
+    total, breakdown = model(trellis, plan_spec, ft,
+                             pack_survivors=pack_survivors, radix=radix,
+                             layout=layout, bm_dtype=bm_dtype, mosaic=mosaic)
+    return TilePlan(int(ft), total, breakdown, vmem_budget,
+                    "unified" if unified else "split", Layout(layout),
+                    str(bm_dtype), bool(mosaic))
+
+
+def _measure_candidates(trellis: Trellis, plan_spec: FrameSpec,
+                        analytic: DecodePlan, *, layout, unified: bool,
+                        pack_survivors: bool, radix: int, bm_dtype: str,
+                        vmem_budget: int, eff_max, num_devices: int,
+                        bf: int, ov: int, chunk_frames, top_k: int):
+    """Top-k candidate plans for the timing pass: the analytic winner, the
+    other layout's winner (layout='auto' only — the measurement exists to
+    second-guess exactly this padding-model comparison), and the half/double
+    tile variants of the winner (the footprint model is linear, but launch
+    overhead vs pipelining is not). Deduped by cache_key; analytic order
+    kept so ties resolve to the model's choice."""
+    tiles = [analytic.tile]
+    if layout == "auto":
+        for lay in (Layout.LANE, Layout.SUBLANE):
+            if lay is not analytic.tile.layout:
+                tiles.append(plan_tiles(
+                    trellis, plan_spec, pack_survivors=pack_survivors,
+                    radix=radix, vmem_budget=vmem_budget, max_frames=eff_max,
+                    unified=unified, layout=lay, bm_dtype=bm_dtype,
+                    mosaic=True))
+    ft0 = analytic.tile.frames_per_tile
+    for ft in (ft0 // 2, ft0 * 2):
+        if CANDIDATE_TILES[0] <= ft <= MAX_FRAMES_PER_TILE:
+            tiles.append(_tile_at(
+                trellis, plan_spec, ft, unified=unified,
+                pack_survivors=pack_survivors, radix=radix,
+                layout=analytic.tile.layout, bm_dtype=bm_dtype,
+                mosaic=analytic.tile.mosaic, vmem_budget=vmem_budget))
+    out, seen = [], set()
+    for t in tiles:
+        cf = (int(chunk_frames) if chunk_frames is not None
+              else 2 * max(1, t.frames_per_tile // bf) * num_devices)
+        p = DecodePlan(t, pack_survivors, radix, cf, num_devices, bf, ov)
+        k = p.cache_key()
+        if k not in seen:
+            seen.add(k)
+            out.append(p)
+    return out[:max(1, int(top_k))]
+
+
 def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
                 pack_survivors: bool = True, radix: int = 4,
                 bm_dtype: str = "float32", layout="auto",
@@ -329,7 +435,10 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
                 max_frames: int | None = None,
                 frames_per_tile: int | None = None,
                 block_frames: int | str = 1,
-                overlap: int | None = None) -> DecodePlan:
+                overlap: int | None = None,
+                measure: bool = False, tunedb: TuneDB | None = None,
+                measure_top_k: int = 3, measure_reps: int = 2,
+                measure_frames: int | None = None) -> DecodePlan:
     """Plan the whole decode: kernel, layout, tile, and chunk geometry.
 
     ``layout='auto'`` evaluates both layouts under mosaic (hardware-padded)
@@ -353,9 +462,22 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
     OUTER frames (what core/stream.py slices), defaulting to two tiles'
     worth of whole frames per device.
 
+    ``measure=True`` adds the on-device timing pass (ROADMAP item 3): the
+    top-k analytic candidates (``_measure_candidates``) are timed with real
+    launches (``measure_plan`` — compiled on accelerators, interpret on
+    CPU) and the plan with the highest measured Mb/s wins. Timings are
+    persisted to the disk-backed tune DB (kernels/tunedb.py; pass
+    ``tunedb=`` to use a non-default instance) keyed by
+    ``DecodePlan.fingerprint()`` x platform identity, so a plan is measured
+    once per (hardware, code) pair and every later process — serve, stream,
+    benchmarks — reuses the cached timing with zero re-measurement
+    (``tunedb_hits`` tracer counters prove it).
+
     Every call runs under a ``plan_decode`` tracing span whose attributes
     carry the chosen plan (kernel, layout, tile, chunk geometry, block
-    decomposition) and the predicted VMEM footprint vs budget — the trace
+    decomposition) and the predicted VMEM footprint vs budget — and, under
+    ``measure=True``, the measured ms/Mb/s next to the predicted bytes plus
+    how many candidates came from cache vs fresh measurement. The trace
     file records *why* the launch geometry is what it is.
     """
     with get_tracer().span("plan_decode") as sp:
@@ -389,13 +511,46 @@ def plan_decode(trellis: Trellis, spec: FrameSpec, *, unified: bool = True,
                               radix=radix, vmem_budget=vmem_budget,
                               max_frames=eff_max, unified=unified,
                               layout=layout, bm_dtype=bm_dtype)
-        if chunk_frames is None:
-            chunk_frames = 2 * max(1, tile.frames_per_tile // bf) * num_devices
-        plan = DecodePlan(tile, pack_survivors, radix, chunk_frames,
+        chunk = (int(chunk_frames) if chunk_frames is not None
+                 else 2 * max(1, tile.frames_per_tile // bf) * num_devices)
+        plan = DecodePlan(tile, pack_survivors, radix, chunk,
                           num_devices, bf, ov)
+        if measure:
+            db = tunedb if tunedb is not None else TUNE_DB
+            if frames_per_tile is not None:
+                candidates = [plan]       # pinned tile: measure + record it
+            else:
+                candidates = _measure_candidates(
+                    trellis, plan_spec, plan, layout=layout, unified=unified,
+                    pack_survivors=pack_survivors, radix=radix,
+                    bm_dtype=bm_dtype, vmem_budget=vmem_budget,
+                    eff_max=eff_max, num_devices=num_devices, bf=bf, ov=ov,
+                    chunk_frames=chunk_frames, top_k=measure_top_k)
+            plat = platform_id()
+            records, fresh = [], 0
+            for cand in candidates:
+                rec = db.get(cand.fingerprint(), plat)
+                if rec is None:
+                    rec = measure_plan(trellis, spec, cand,
+                                       reps=measure_reps,
+                                       frames=measure_frames)
+                    db.put(cand.fingerprint(), rec, plat)
+                    db.record_measure()
+                    fresh += 1
+                records.append((cand, rec))
+            analytic_fp = plan.fingerprint()
+            plan, best = max(records,
+                             key=lambda pr: pr[1].get("mbps", 0.0))
+            tile = plan.tile
+            sp.set(measured_ms=round(float(best["ms"]), 4),
+                   measured_mbps=round(float(best["mbps"]), 4),
+                   measure_candidates=len(records), measure_new=fresh,
+                   measure_cached=len(records) - fresh,
+                   analytic_fingerprint=analytic_fp)
         sp.set(kernel=tile.kernel, layout=Layout(tile.layout).value,
                frames_per_tile=tile.frames_per_tile,
-               bm_dtype=str(tile.bm_dtype), chunk_frames=int(chunk_frames),
+               bm_dtype=str(tile.bm_dtype),
+               chunk_frames=int(plan.chunk_frames),
                num_devices=int(num_devices), block_frames=int(bf),
                overlap=int(ov), vmem_bytes=tile.vmem_bytes,
                vmem_budget=tile.budget,

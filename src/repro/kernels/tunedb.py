@@ -1,0 +1,241 @@
+"""Disk-backed measured-autotune database for decode plans.
+
+``plan_decode`` is an analytic VMEM model: it predicts which kernel
+configuration *should* be fastest from a byte-accounting of the per-tile
+working set. That model ranks configurations well in interpret mode, but
+the paper's regime is real hardware, where DMA pipelining, lane padding,
+and compiler scheduling decide the winner — the only honest arbiter is a
+timed launch on the device that will actually run the plan.
+
+Measuring is expensive (a compile plus several launches per candidate),
+so measurements are cached HERE, on disk, keyed by::
+
+    DecodePlan.fingerprint()  x  platform identity
+
+where the platform identity is the same (backend, device_kind,
+jax_version) stamp ``benchmarks/trajectory.platform()`` puts on every
+recorded benchmark run — ``platform_id`` below is the single source of
+truth both import. A plan is therefore measured once per (hardware,
+code) pair and the result is shared by every process on the machine:
+the serve layer, the stream front-end, and the benchmarks all converge
+on the same measured choice without re-paying the timing pass.
+
+Robustness contract (the acceptance criterion of the observatory PR):
+
+  * a second process with the same fingerprint + platform reuses the
+    cached timing — zero re-measurement, visible as ``tunedb_hits``
+    tracer counters and ``TuneDB.stats()``;
+  * a changed fingerprint (any plan knob) or a different device kind
+    misses and re-measures;
+  * a corrupt/truncated/wrong-schema DB file is DISCARDED with a
+    structured ``TuneDBWarning`` — never a crash, never a half-loaded
+    table; the next ``put`` rewrites a clean file;
+  * writes are atomic (tmp + fsync + ``os.replace``) and merge with
+    whatever is on disk first, so concurrent processes appending
+    different plans never clobber each other's rows.
+
+The DB location is ``$REPRO_TUNE_DB`` when set, else
+``~/.cache/repro_viterbi/tunedb.json`` (``default_path``). Delete the
+file — or point the env var elsewhere — to invalidate every measurement
+(e.g. after a driver/toolchain upgrade the jax_version key does not
+capture).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+import warnings
+
+from ..obs.tracer import get_tracer
+
+__all__ = ["TuneDB", "TUNE_DB", "TuneDBWarning", "platform_id",
+           "platform_key", "default_path", "SCHEMA"]
+
+SCHEMA = "repro.tunedb/v1"
+
+#: Env var overriding the DB file location (tests point it at a tmp dir;
+#: ops point it at shared fast storage).
+ENV_PATH = "REPRO_TUNE_DB"
+
+
+class TuneDBWarning(UserWarning):
+    """A tune-DB file could not be used (corrupt / wrong schema) and was
+    discarded. Structured so callers and test suites can filter on it —
+    the decode path itself must never crash on a bad cache file."""
+
+
+def platform_id() -> dict:
+    """The JAX backend/device identity of THIS process — the hardware
+    half of every tune-DB key, and the stamp ``benchmarks/trajectory``
+    puts on recorded runs (it delegates here). Lazy jax import: loading
+    the DB module must not initialize JAX."""
+    import jax
+    return {"backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "jax_version": jax.__version__}
+
+
+def platform_key(platform: dict | None = None) -> str:
+    """Flatten a platform identity into the string the DB is keyed by.
+    ``jax_version`` is part of the key: a toolchain upgrade recompiles
+    every kernel, so old timings must not be trusted across it."""
+    p = platform or platform_id()
+    return f"{p['backend']}/{p['device_kind']}/{p.get('jax_version', '?')}"
+
+
+def default_path() -> str:
+    env = os.environ.get(ENV_PATH)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro_viterbi",
+                        "tunedb.json")
+
+
+class TuneDB:
+    """Thread-safe, process-shared table of measured plan timings.
+
+    Rows live under ``data[platform_key][fingerprint]`` and are plain
+    JSON dicts (``ms``/``mbps``/``frames``/``reps``/``measured_at`` plus
+    whatever the measuring pass records). ``get`` counts hits/misses on
+    the instance and on the process tracer (``tunedb_hits`` /
+    ``tunedb_misses``) so a trace file alone shows whether a run
+    re-measured; ``record_measure`` counts actual timing passes
+    (``tunedb_measures``) — the acceptance criterion's "zero
+    re-measurement in a second process" is literally
+    ``stats()['measures'] == 0``.
+    """
+
+    def __init__(self, path: str | None = None):
+        self._path = path
+        self._lock = threading.Lock()
+        self._data: dict | None = None      # lazy: load on first access
+        self.hits = 0
+        self.misses = 0
+        self.measures = 0
+
+    @property
+    def path(self) -> str:
+        return self._path or default_path()
+
+    # -- disk ------------------------------------------------------------
+    def _read_file(self) -> dict:
+        """Parse the on-disk table; a missing file is empty, a BAD file
+        is a TuneDBWarning + empty (the robustness contract)."""
+        path = self.path
+        if not os.path.exists(path):
+            return {}
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+            if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+                raise ValueError(
+                    f"schema is {doc.get('schema')!r} (expected {SCHEMA!r})"
+                    if isinstance(doc, dict) else
+                    f"document is {type(doc).__name__}, expected an object")
+            table = doc.get("platforms", {})
+            if not isinstance(table, dict) or not all(
+                    isinstance(v, dict) for v in table.values()):
+                raise ValueError("'platforms' is not a table of tables")
+            return table
+        except (OSError, ValueError, TypeError) as e:
+            warnings.warn(
+                f"tune DB at {path} is unusable ({e.__class__.__name__}: "
+                f"{e}); discarding it — plans will be re-measured and the "
+                f"next write replaces the file", TuneDBWarning,
+                stacklevel=3)
+            return {}
+
+    def _write_file(self, table: dict) -> None:
+        """Atomic tmp + fsync + replace, so a reader (or a crash) never
+        sees a torn table."""
+        path = self.path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=".tunedb-")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump({"schema": SCHEMA, "platforms": table}, fh,
+                          indent=1, sort_keys=True)
+                fh.write("\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _table(self) -> dict:
+        if self._data is None:
+            self._data = self._read_file()
+        return self._data
+
+    # -- API -------------------------------------------------------------
+    def get(self, fingerprint: str, platform: dict | None = None) -> dict | None:
+        """The measured record for (plan, platform), or None. Bumps the
+        hit/miss counters here and on the process tracer."""
+        key = platform_key(platform)
+        with self._lock:
+            rec = self._table().get(key, {}).get(fingerprint)
+            if rec is not None:
+                self.hits += 1
+            else:
+                self.misses += 1
+        get_tracer().count("tunedb_hits" if rec is not None
+                           else "tunedb_misses")
+        return rec
+
+    def put(self, fingerprint: str, record: dict,
+            platform: dict | None = None) -> dict:
+        """Persist one measured record, merging with whatever is on disk
+        first so concurrent writers keep each other's rows. Returns the
+        stored record."""
+        key = platform_key(platform)
+        record = dict(record)
+        record.setdefault("measured_at", time.time())
+        with self._lock:
+            table = self._read_file()       # fresh merge base
+            mem = self._data or {}
+            for pk, rows in mem.items():    # keep rows only we have seen
+                table.setdefault(pk, {}).update(
+                    {fp: r for fp, r in rows.items()
+                     if fp not in table.get(pk, {})})
+            table.setdefault(key, {})[fingerprint] = record
+            self._write_file(table)
+            self._data = table
+        return record
+
+    def record_measure(self, n: int = 1) -> None:
+        """Count a real timing pass (the expensive thing the DB avoids)."""
+        with self._lock:
+            self.measures += n
+        get_tracer().count("tunedb_measures", n)
+
+    def invalidate(self) -> None:
+        """Drop the in-memory table AND delete the on-disk file — the
+        runbook's 'measurements are stale' escape hatch."""
+        with self._lock:
+            self._data = {}
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
+    def stats(self) -> dict:
+        with self._lock:
+            table = self._table()
+            return {"path": self.path,
+                    "platforms": len(table),
+                    "entries": sum(len(v) for v in table.values()),
+                    "hits": self.hits, "misses": self.misses,
+                    "measures": self.measures}
+
+
+#: Process-global default instance (``plan_decode(measure=True)`` uses it
+#: unless handed another). Lazy: nothing is read until the first lookup.
+TUNE_DB = TuneDB()

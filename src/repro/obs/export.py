@@ -95,6 +95,13 @@ def _label(value) -> str:
     return str(value).replace("\\", r"\\").replace('"', r'\"')
 
 
+def _labelstr(labels: dict | None) -> str:
+    if not labels:
+        return ""
+    return ("{" + ",".join(f'{k}="{_label(v)}"'
+                           for k, v in sorted(labels.items())) + "}")
+
+
 class _Expo:
     """Accumulates exposition lines with one # TYPE header per metric."""
 
@@ -109,11 +116,23 @@ class _Expo:
         if name not in self._typed:
             self._typed.add(name)
             self.lines.append(f"# TYPE {name} {mtype}")
-        lab = ""
-        if labels:
-            lab = ("{" + ",".join(f'{k}="{_label(v)}"'
-                                  for k, v in sorted(labels.items())) + "}")
-        self.lines.append(f"{name}{lab} {value}")
+        self.lines.append(f"{name}{_labelstr(labels)} {value}")
+
+    def histogram(self, name: str, buckets, total, count,
+                  labels: dict | None = None):
+        """One Prometheus histogram: ``# TYPE name histogram`` once, then
+        ``name_bucket{le=...}`` samples (cumulative, ending at +Inf) plus
+        ``name_sum``/``name_count`` — the convention every Prometheus
+        aggregator understands (histogram_quantile works on these)."""
+        if name not in self._typed:
+            self._typed.add(name)
+            self.lines.append(f"# TYPE {name} histogram")
+        labels = labels or {}
+        for le, c in buckets:
+            self.lines.append(
+                f"{name}_bucket{_labelstr({**labels, 'le': le})} {c}")
+        self.lines.append(f"{name}_sum{_labelstr(labels)} {total}")
+        self.lines.append(f"{name}_count{_labelstr(labels)} {count}")
 
 
 def prometheus_text(snapshot: dict, prefix: str = "repro_serve") -> str:
@@ -121,9 +140,14 @@ def prometheus_text(snapshot: dict, prefix: str = "repro_serve") -> str:
 
     Emits totals (counters + gauges), per-bucket rows with a
     ``bucket=...`` label, stage-latency summaries with ``stage=...`` and
-    ``stat=...`` labels, and the plan-cache counters. Non-numeric fields
-    (health strings, error messages) are skipped — expositions carry
-    numbers only.
+    ``stat=...`` labels, the server-wide stage histograms as true
+    Prometheus histogram series (``{prefix}_stage_ms_bucket{stage=,le=}``
+    cumulative samples + ``_sum``/``_count``, from the snapshot's
+    ``stages_hist`` key), and the plan-cache counters
+    (entries/hits/misses/traces/build_ms). Non-numeric fields (health
+    strings, error messages) are skipped — expositions carry numbers
+    only; the histogram ``le`` bound rides in a label so the ``+Inf``
+    bucket stays exposition-legal.
     """
     expo = _Expo()
     for key, val in sorted(snapshot.get("totals", {}).items()):
@@ -144,6 +168,14 @@ def prometheus_text(snapshot: dict, prefix: str = "repro_serve") -> str:
         name = _metric_name(prefix, "stage", "latency_ms")
         for stat, val in sorted(summ.items()):
             expo.sample(name, val, {"stage": stage, "stat": stat})
+    # full-resolution stage histograms (snapshot "stages_hist"): real
+    # Prometheus histogram series — unlike the p50/p99 gauges above these
+    # aggregate across servers, so a fleet dashboard can compute honest
+    # fleet-wide quantiles with histogram_quantile()
+    for stage, hist in sorted(snapshot.get("stages_hist", {}).items()):
+        expo.histogram(_metric_name(prefix, "stage", "ms"),
+                       hist.get("buckets", ()), hist.get("sum", 0),
+                       hist.get("count", 0), {"stage": stage})
     for key, val in sorted(snapshot.get("plan_cache", {}).items()):
         mtype = "counter" if key in _COUNTER_KEYS else "gauge"
         expo.sample(_metric_name(prefix, "plan_cache", key), val,

@@ -117,6 +117,18 @@ class Histogram:
             cum += c
         return self.vmax
 
+    def cumulative(self) -> list:
+        """``(upper_bound, cumulative_count)`` per bucket, ending with
+        ``(inf, count)`` — the Prometheus histogram exposition shape
+        (``_bucket{le=...}`` samples are cumulative and always include
+        the ``+Inf`` bucket)."""
+        out, cum = [], 0
+        for bound, c in zip(self.bounds, self.counts):
+            cum += c
+            out.append((bound, cum))
+        out.append((float("inf"), self.count))
+        return out
+
     def snapshot(self) -> dict:
         """JSON-ready summary (keys shared by the stage-latency rows in
         ``metrics_snapshot()`` and the Prometheus exposition)."""

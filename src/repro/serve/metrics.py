@@ -223,6 +223,20 @@ class ServeMetrics:
         """{stage: summary} — the stage-latency breakdown rows."""
         return {name: h.snapshot() for name, h in self._stages.items()}
 
+    def stage_histograms(self) -> dict:
+        """{stage: {buckets, sum, count}} — the FULL stage histograms in
+        Prometheus histogram shape: ``buckets`` is ``[le, cumulative]``
+        pairs including the terminal ``+Inf`` bucket (a string, so the
+        snapshot stays strict JSON). ``stage_snapshot`` carries the
+        summary stats; this carries the distribution a scrape can
+        aggregate across servers (export.prometheus_text emits it as
+        ``_bucket``/``_sum``/``_count`` sample lines)."""
+        def shape(h):
+            return {"buckets": [["+Inf" if le == float("inf") else le, c]
+                                for le, c in h.cumulative()],
+                    "sum": round(h.total, 6), "count": h.count}
+        return {name: shape(h) for name, h in self._stages.items()}
+
     def state_dict(self) -> dict:
         """Everything the serve checkpoint persists about metrics: every
         bucket's counters/latency, the stage histograms, and the

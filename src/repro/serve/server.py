@@ -802,10 +802,14 @@ class DecodeServer:
         sessions; ``breakers`` carries every primary bucket's circuit
         breaker (state/trips/consecutive); ``checkpoint`` the save/
         restore counts; ``faults`` reports the injector's schedule
-        counters when one is attached."""
+        counters when one is attached. ``stages_hist`` carries the same
+        stage histograms at full bucket resolution (Prometheus histogram
+        shape — cumulative ``[le, count]`` pairs), so a scrape exports
+        aggregatable ``_bucket`` series, not just point summaries."""
         snap = {"buckets": self.metrics.snapshot(),
                 "totals": self.metrics.totals(),
                 "stages": self.metrics.stage_snapshot(),
+                "stages_hist": self.metrics.stage_histograms(),
                 "plan_cache": self.cache.stats(),
                 "sessions": len(self._sessions),
                 "quarantined_sessions": sum(

@@ -1,0 +1,111 @@
+"""Tests for scripts/bench_gate.py platform separation and the
+serve-load trajectory accessors.
+
+The gate's contract since compiled-mode benching: one BENCH_kernels.json
+may hold interpret-CPU runs AND compiled-GPU/TPU runs of the same code
+(orders of magnitude apart), and every comparison must stay inside one
+platform. Pre-stamp legacy runs (no "platform" key) were all produced by
+interpret-CPU runs and must gate as such — and never against a stamped
+compiled run.
+"""
+import importlib.util
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bench_gate():
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", os.path.join(ROOT, "scripts", "bench_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_gate = _bench_gate()
+
+CPU = {"backend": "cpu", "device_kind": "cpu"}
+GPU = {"backend": "gpu", "device_kind": "NVIDIA A100"}
+
+#: Minimal gateable run: quick workload, one kernel row at N_BITS.
+N_BITS = 8192
+
+
+def _run(platform=None, n_bits=N_BITS, full=False, mbps=1.0):
+    run = {"full": full, "rows": [{"n_bits": n_bits, "mbps": mbps}]}
+    if platform is not None:
+        run["platform"] = dict(platform, jax_version="0.0.0")
+    return run
+
+
+def test_pre_stamp_runs_assume_legacy_cpu():
+    legacy = _run(platform=None)
+    assert bench_gate._run_platform(legacy) == CPU
+    # ... so they ARE comparable to a cpu run ...
+    assert bench_gate.comparable_runs([legacy], CPU, N_BITS) == [legacy]
+    # ... and NEVER to a stamped compiled run
+    assert bench_gate.comparable_runs([legacy], GPU, N_BITS) == []
+
+
+def test_two_platform_trajectory_gates_independently():
+    cpu_runs = [_run(CPU, mbps=1.0), _run(CPU, mbps=1.1)]
+    gpu_runs = [_run(GPU, mbps=900.0), _run(GPU, mbps=950.0)]
+    prior = [cpu_runs[0], gpu_runs[0], cpu_runs[1], gpu_runs[1]]
+    assert bench_gate.comparable_runs(prior, CPU, N_BITS) == cpu_runs
+    assert bench_gate.comparable_runs(prior, GPU, N_BITS) == gpu_runs
+
+
+def test_device_kind_alone_separates():
+    """Same backend, different device kind (e.g. two GPU generations)
+    must not be compared — compiled perf is device-specific."""
+    a100 = _run(GPU)
+    h100 = _run({"backend": "gpu", "device_kind": "NVIDIA H100"})
+    got = bench_gate.comparable_runs([a100, h100], GPU, N_BITS)
+    assert got == [a100]
+
+
+def test_workload_filter_still_applies():
+    wrong_bits = _run(CPU, n_bits=N_BITS * 2)
+    full = _run(CPU, full=True)
+    ok = _run(CPU)
+    got = bench_gate.comparable_runs([wrong_bits, full, ok], CPU, N_BITS)
+    assert got == [ok]
+
+
+def test_current_platform_matches_tunedb_identity():
+    """trajectory.platform() and the tune-DB platform_id() must be the
+    same identity — one measurement key, one run stamp."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)
+    from benchmarks.trajectory import platform
+    from repro.kernels.tunedb import platform_id
+    assert platform() == platform_id()
+    assert bench_gate._run_platform({"platform": platform()})["backend"] \
+        == platform()["backend"]
+
+
+def test_serve_load_p99_accessor():
+    sys.path.insert(0, ROOT)
+    from benchmarks.trajectory import serve_load_p99
+    run = {"serve_load": [
+        {"sessions": 64, "n_bits": 1000, "p99_ms": 8.5},
+        {"sessions": 256, "n_bits": 4000, "p99_ms": 33.1},
+        {"sessions": 1024, "n_bits": 16000, "p99_ms": 129.9}]}
+    assert serve_load_p99(run, 64) == 8.5
+    assert serve_load_p99(run, 1024) == 129.9
+    assert serve_load_p99(run, 512) == 0.0        # level never ran
+    assert serve_load_p99({}, 64) == 0.0          # run predates the sweep
+
+
+def test_serve_load_gate_inversion_arithmetic():
+    """The latency gate is inverted: cur > (1 + tol) * min(stored) fails.
+    Pin the arithmetic the gate applies so a sign slip (latency gated
+    like throughput) cannot survive."""
+    stored = [10.0, 12.0, 11.0]
+    tol = 0.2
+    base = min(stored)
+    ceil = (1.0 + tol) * base
+    assert ceil == 12.0
+    assert not 11.9 > ceil                        # within tolerance: pass
+    assert 12.1 > ceil                            # regression: fail

@@ -218,7 +218,7 @@ def test_chrome_trace_stringifies_exotic_attr_values():
 
 
 _EXPO_LINE = re.compile(
-    r'^(# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* (counter|gauge)'
+    r'^(# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* (counter|gauge|histogram)'
     r'|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z0-9_]+="[^"]*"'
     r'(,[a-zA-Z0-9_]+="[^"]*")*\})? -?[0-9.e+-]+)$')
 
@@ -245,6 +245,55 @@ def test_prometheus_text_parses_line_by_line():
                for l in lines)
     # non-numeric fields (health, last_error) never reach the exposition
     assert "health" not in text and "boom" not in text
+
+
+def test_prometheus_text_emits_true_histograms():
+    """`stages_hist` must come out as real Prometheus histogram series:
+    cumulative `_bucket{le=...}` samples ending at le="+Inf" whose count
+    equals `_count`, plus `_sum` — the shape histogram_quantile() needs."""
+    snap = {"totals": {},
+            "stages_hist": {
+                "queue_wait_ms": {"buckets": [[0.5, 2], [2.0, 5],
+                                              ["+Inf", 7]],
+                                  "sum": 6.25, "count": 7},
+                "launch_ms": {"buckets": [[1.0, 1], ["+Inf", 1]],
+                              "sum": 0.8, "count": 1}}}
+    text = prometheus_text(snap)
+    lines = text.strip().split("\n")
+    for line in lines:
+        assert _EXPO_LINE.match(line), f"unparseable line: {line!r}"
+    # one TYPE header for the whole family, even with two stages
+    assert lines.count("# TYPE repro_serve_stage_ms histogram") == 1
+    q = [l for l in lines if 'stage="queue_wait_ms"' in l]
+    assert 'repro_serve_stage_ms_bucket{le="0.5",stage="queue_wait_ms"} 2' \
+        in q
+    assert 'repro_serve_stage_ms_bucket{le="2.0",stage="queue_wait_ms"} 5' \
+        in q
+    assert 'repro_serve_stage_ms_bucket{le="+Inf",stage="queue_wait_ms"} 7' \
+        in q
+    assert 'repro_serve_stage_ms_sum{stage="queue_wait_ms"} 6.25' in q
+    assert 'repro_serve_stage_ms_count{stage="queue_wait_ms"} 7' in q
+    # counts are cumulative (monotone non-decreasing up to +Inf == _count)
+    counts = [int(l.rsplit(" ", 1)[1]) for l in q if "_bucket{" in l]
+    assert counts == sorted(counts) and counts[-1] == 7
+
+
+def test_server_snapshot_histograms_round_trip_exposition():
+    """End to end: a served workload's metrics_snapshot() carries
+    stages_hist, and its exposition parses with cumulative buckets."""
+    srv, sids = _serve_workload(None)
+    snap = srv.metrics_snapshot()
+    hists = snap["stages_hist"]
+    for stage in ("queue_wait_ms", "launch_ms", "retire_ms"):
+        h = hists[stage]
+        assert h["count"] > 0
+        assert h["buckets"][-1][0] == "+Inf"
+        assert h["buckets"][-1][1] == h["count"]
+    json.dumps(snap)                    # "+Inf" as string: strict JSON
+    text = prometheus_text(snap)
+    for line in text.strip().split("\n"):
+        assert _EXPO_LINE.match(line), f"unparseable line: {line!r}"
+    assert "# TYPE repro_serve_stage_ms histogram" in text
 
 
 # -------------------------------------------------- pipeline integration

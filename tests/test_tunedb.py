@@ -1,0 +1,222 @@
+"""Tests for the disk-backed measured-autotune DB (kernels/tunedb.py)
+and the ``plan_decode(measure=True)`` timing pass — the observatory PR's
+acceptance criteria:
+
+  * measured timings round-trip across processes: a second process with
+    the same fingerprint + platform reuses the cache with ZERO
+    re-measurement (verified via tracer counters and stats());
+  * a changed fingerprint or device kind re-measures;
+  * a corrupt DB file is discarded with a structured TuneDBWarning,
+    never a crash.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import FrameSpec, STD_K7
+from repro.kernels.autotune import measure_plan, plan_decode
+from repro.kernels.tunedb import (SCHEMA, TuneDB, TuneDBWarning,
+                                  default_path, platform_id, platform_key)
+from repro.obs.tracer import Tracer, set_tracer
+
+SPEC = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)
+
+#: Smallest honest measured plan_decode call: pinned tile => exactly one
+#: candidate, one rep, a 4-frame launch.
+MEASURE_KW = dict(measure=True, measure_reps=1, chunk_frames=4,
+                  frames_per_tile=8)
+
+
+@pytest.fixture
+def db_path(tmp_path, monkeypatch):
+    """Point the default DB location (env override) into tmp."""
+    p = str(tmp_path / "tunedb.json")
+    monkeypatch.setenv("REPRO_TUNE_DB", p)
+    return p
+
+
+def test_default_path_env_override(db_path):
+    assert default_path() == db_path
+    db = TuneDB()
+    assert db.path == db_path
+
+
+def test_platform_key_includes_jax_version():
+    pid = platform_id()
+    assert set(pid) == {"backend", "device_kind", "jax_version"}
+    key = platform_key(pid)
+    assert key.count("/") == 2 and pid["jax_version"] in key
+    # a different device kind is a DIFFERENT key (re-measure trigger)
+    other = dict(pid, device_kind="weird-accelerator")
+    assert platform_key(other) != key
+
+
+def test_measure_plan_record_shape(db_path):
+    plan = plan_decode(STD_K7, SPEC, frames_per_tile=8, chunk_frames=4)
+    rec = measure_plan(STD_K7, SPEC, plan, reps=1)
+    assert rec["ms"] > 0 and rec["mbps"] > 0
+    assert rec["frames"] == plan.chunk_frames
+    assert rec["fingerprint"] == plan.fingerprint()
+    assert rec["interpret"] is (platform_id()["backend"] == "cpu")
+
+
+def test_round_trip_second_instance_zero_remeasure(db_path):
+    """A fresh TuneDB instance on the same file (the in-process model of
+    a second process) must serve every candidate from cache: zero
+    measures, all hits — and the tracer counters must say so."""
+    db1 = TuneDB()
+    p1 = plan_decode(STD_K7, SPEC, tunedb=db1, **MEASURE_KW)
+    s1 = db1.stats()
+    assert s1["measures"] >= 1 and s1["entries"] >= 1
+
+    t = Tracer()
+    set_tracer(t)
+    try:
+        db2 = TuneDB()
+        p2 = plan_decode(STD_K7, SPEC, tunedb=db2, **MEASURE_KW)
+    finally:
+        set_tracer(None)
+    s2 = db2.stats()
+    assert s2["measures"] == 0, "second instance re-measured a cached plan"
+    assert s2["hits"] >= 1 and s2["misses"] == 0
+    assert p2.cache_key() == p1.cache_key()
+    counters = t.counters()
+    assert counters.get("tunedb_hits", 0) >= 1
+    assert "tunedb_measures" not in counters
+    assert "tunedb_misses" not in counters
+
+
+def test_round_trip_across_real_processes(db_path):
+    """The acceptance criterion verbatim: a SECOND PROCESS with the same
+    fingerprint + platform reuses the cached timing with zero
+    re-measurement, visible in its tracer counters."""
+    db = TuneDB()
+    p = plan_decode(STD_K7, SPEC, tunedb=db, **MEASURE_KW)
+    assert db.stats()["measures"] >= 1
+    prog = (
+        "import json\n"
+        "from repro.core import FrameSpec, STD_K7\n"
+        "from repro.kernels.autotune import plan_decode\n"
+        "from repro.kernels.tunedb import TuneDB\n"
+        "from repro.obs.tracer import Tracer, set_tracer\n"
+        "t = Tracer(); set_tracer(t)\n"
+        "db = TuneDB()\n"
+        "spec = FrameSpec(f=64, v1=16, v2=20, f0=16, v2s=20)\n"
+        "p = plan_decode(STD_K7, spec, measure=True, tunedb=db,\n"
+        "                measure_reps=1, chunk_frames=4, frames_per_tile=8)\n"
+        "print(json.dumps({'stats': db.stats(), 'counters': t.counters(),\n"
+        "                  'fp': p.fingerprint()}))\n")
+    out = subprocess.run([sys.executable, "-c", prog], check=True,
+                         capture_output=True, text=True)
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["fp"] == p.fingerprint()
+    assert got["stats"]["measures"] == 0, \
+        "second process re-measured a cached plan"
+    assert got["stats"]["hits"] >= 1 and got["stats"]["misses"] == 0
+    assert got["counters"].get("tunedb_hits", 0) >= 1
+    assert "tunedb_measures" not in got["counters"]
+
+
+def test_changed_fingerprint_remeasures(db_path):
+    db = TuneDB()
+    plan_decode(STD_K7, SPEC, tunedb=db, **MEASURE_KW)
+    before = db.stats()["measures"]
+    # radix is part of cache_key() -> different fingerprint -> cache miss
+    plan_decode(STD_K7, SPEC, tunedb=db, radix=2, **MEASURE_KW)
+    assert db.stats()["measures"] > before
+
+
+def test_changed_device_kind_remeasures(db_path, monkeypatch):
+    db = TuneDB()
+    plan_decode(STD_K7, SPEC, tunedb=db, **MEASURE_KW)
+    before = db.stats()["measures"]
+    # same fingerprint, different device kind: the cached timing must
+    # not be trusted (backend stays 'cpu' so the kernel still interprets)
+    import repro.kernels.autotune as autotune
+    fake = dict(platform_id(), device_kind="other-cpu")
+    monkeypatch.setattr(autotune, "platform_id", lambda: fake)
+    plan_decode(STD_K7, SPEC, tunedb=db, **MEASURE_KW)
+    stats = db.stats()
+    assert stats["measures"] > before
+    assert stats["platforms"] == 2               # both rows persisted
+
+
+def test_corrupt_db_warns_never_crashes(db_path):
+    with open(db_path, "w") as fh:
+        fh.write('{"schema": "repro.tunedb/v1", "platforms": [1, 2]}')
+    db = TuneDB()
+    with pytest.warns(TuneDBWarning, match="unusable"):
+        assert db.get("deadbeef00") is None
+    # the next put replaces the corrupt file with a clean one
+    db.put("deadbeef00", {"ms": 1.0, "mbps": 2.0})
+    with open(db_path) as fh:
+        doc = json.load(fh)
+    assert doc["schema"] == SCHEMA
+    db2 = TuneDB()
+    assert db2.get("deadbeef00")["mbps"] == 2.0
+
+
+@pytest.mark.parametrize("garbage", ["not json at all{{{",
+                                     '["a", "list"]',
+                                     '{"schema": "something/else"}'])
+def test_bad_files_all_warn(db_path, garbage):
+    with open(db_path, "w") as fh:
+        fh.write(garbage)
+    with pytest.warns(TuneDBWarning):
+        assert TuneDB().get("aa") is None
+
+
+def test_concurrent_writers_merge_rows(db_path):
+    """Two instances writing different fingerprints must not clobber each
+    other: put() re-reads the file as its merge base."""
+    a, b = TuneDB(), TuneDB()
+    a.get("fp_a")                                # load both tables (empty)
+    b.get("fp_b")
+    a.put("fp_a", {"ms": 1.0, "mbps": 10.0})
+    b.put("fp_b", {"ms": 2.0, "mbps": 20.0})     # merge-with-disk keeps fp_a
+    c = TuneDB()
+    assert c.get("fp_a")["mbps"] == 10.0
+    assert c.get("fp_b")["mbps"] == 20.0
+    assert c.stats()["entries"] == 2
+
+
+def test_invalidate_deletes_file(db_path):
+    db = TuneDB()
+    db.put("fp", {"ms": 1.0, "mbps": 1.0})
+    assert os.path.exists(db_path)
+    db.invalidate()
+    assert not os.path.exists(db_path)
+    assert db.get("fp") is None
+
+
+def test_measured_span_attrs(db_path):
+    """plan_decode(measure=True) must put measured-vs-predicted numbers
+    on its span: measured_ms/measured_mbps next to the predicted
+    vmem_bytes, plus the cache-vs-fresh candidate counts."""
+    t = Tracer()
+    set_tracer(t)
+    try:
+        plan_decode(STD_K7, SPEC, tunedb=TuneDB(), **MEASURE_KW)
+    finally:
+        set_tracer(None)
+    (span,) = [r for r in t.spans() if r.name == "plan_decode"]
+    at = span.attrs
+    assert at["measured_ms"] > 0 and at["measured_mbps"] > 0
+    assert at["vmem_bytes"] > 0                  # predicted, still there
+    assert at["measure_candidates"] == at["measure_new"] == 1
+    assert at["measure_cached"] == 0
+    assert at["fingerprint"] == at["analytic_fingerprint"]
+
+
+def test_measured_choice_among_candidates(db_path):
+    """Unpinned measure pass: top-k candidates all land in the DB and the
+    returned plan is one of them (highest measured mbps)."""
+    db = TuneDB()
+    plan = plan_decode(STD_K7, SPEC, tunedb=db, measure=True,
+                       measure_reps=1, measure_top_k=2, chunk_frames=4)
+    stats = db.stats()
+    assert stats["entries"] == 2 and stats["measures"] == 2
+    assert db.get(plan.fingerprint()) is not None
